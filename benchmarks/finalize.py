@@ -1,0 +1,160 @@
+"""Assemble the final EXPERIMENTS.md §Dry-run + §Roofline tables.
+
+Merges the dry-run JSONL files (latest record wins per combo),
+recomputes the analytic roofline terms with the current cost model
+(earlier records carry pre-fix decode terms), and prints markdown.
+
+    PYTHONPATH=src python -m benchmarks.finalize
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import sys
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config, shape_config
+from repro.launch import analytic as A
+
+SINGLE_FILES = ["experiments/dryrun_single.jsonl",
+                "experiments/dryrun_refresh.jsonl"]
+MULTI_FILES = ["experiments/dryrun_multi.jsonl",
+               "experiments/dryrun_multi2.jsonl"]
+CEFL_FILES = ["experiments/dryrun_cefl.jsonl",
+              "experiments/dryrun_cefl2.jsonl"]
+
+
+class _Mesh:
+    def __init__(self, shape_str):
+        dims = [int(x) for x in shape_str.split("x")]
+        if len(dims) == 3:
+            self.axis_names = ("pod", "data", "model")
+        else:
+            self.axis_names = ("data", "model")
+
+        class D:
+            shape = tuple(dims)
+        self.devices = D
+
+
+def load_latest(paths):
+    recs = {}
+    for p in paths:
+        try:
+            with open(p) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r.get("overrides"):
+                        continue            # lever runs live in §Perf
+                    recs[(r["arch"], r["shape"], r["mesh"], r["mode"])] = r
+        except FileNotFoundError:
+            pass
+    return list(recs.values())
+
+
+def recompute_roofline(r):
+    cfg = shape_config(get_config(r["arch"]), r["shape"])
+    mesh = _Mesh(r["mesh"])
+    ar = A.analytic_roofline(cfg, r["shape"], mesh,
+                             mode=("cefl" if r["mode"] == "cefl" else "ddp"),
+                             inner_steps=8)
+    n = math.prod(mesh.devices.shape)
+    r["roofline"] = {
+        "compute_s": ar.compute_s, "memory_s": ar.memory_s,
+        "collective_s": ar.collective_s, "dominant": ar.dominant,
+        "flops_per_dev": ar.flops_per_dev, "hbm_per_dev": ar.hbm_per_dev,
+        "ici_per_dev": ar.ici_per_dev, "dcn_per_dev": ar.dcn_per_dev,
+        "model_flops": ar.model_flops,
+        "useful_ratio": (ar.model_flops / (ar.flops_per_dev * n)
+                         if ar.flops_per_dev else None),
+    }
+    return r
+
+
+ORDER = ["hubert-xlarge", "qwen3-moe-235b-a22b", "yi-6b",
+         "granite-moe-3b-a800m", "xlstm-350m", "nemotron-4-340b",
+         "codeqwen1.5-7b", "qwen2.5-32b", "zamba2-1.2b",
+         "phi-3-vision-4.2b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    return (ORDER.index(r["arch"]), SHAPES.index(r["shape"]))
+
+
+def roofline_md(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL/HLO | what would move the dominant term |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"**{rf['dominant']}** | {rf['useful_ratio']:.2f} | "
+            f"{_next_move(r)} |")
+    return "\n".join(rows)
+
+
+def _next_move(r):
+    cfg = get_config(r["arch"])
+    dom = r["roofline"]["dominant"]
+    if dom == "collective":
+        if cfg.arch_type == "moe":
+            return "fp8 a2a dispatch; locality-aware expert placement"
+        if r["shape"] == "train_4k":
+            return "CEFL partial sync across pods (ε local steps)"
+        return "larger per-device batch (amortize TP all-reduce)"
+    if dom == "memory":
+        return "int8 KV cache (+scales); fuse cache read into attention"
+    return "bf16-native matmuls already; raise tokens/chip (less remat)"
+
+
+def dryrun_md(recs):
+    rows = ["| arch | shape | mesh | mode | temp GB/dev | args GB/dev | "
+            "fits 16GB | top collectives (link GB once-through) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (_key(x), x["mesh"], x["mode"])):
+        mem = r["memory"]
+        tot = (mem["temp_bytes"] + mem["argument_bytes"]) / 1e9
+        sched = sorted(r["collective_schedule"],
+                       key=lambda s: -s["link_bytes"])[:3]
+        s = "; ".join(f"{x['kind']}×{x['count']}(g{x['group']}"
+                      f"{',DCN' if x['dcn'] else ''})"
+                      f"={x['link_bytes']/1e9:.2f}" for x in sched)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+            f"{mem['temp_bytes']/1e9:.2f} | {mem['argument_bytes']/1e9:.2f} | "
+            f"{'yes' if tot <= 16 else 'NO'} | {s or '—'} |")
+    return "\n".join(rows)
+
+
+def main():
+    single = [recompute_roofline(r) for r in load_latest(SINGLE_FILES)]
+    multi = [recompute_roofline(r) for r in load_latest(MULTI_FILES)]
+    cefl = [recompute_roofline(r) for r in load_latest(CEFL_FILES)]
+    with open("experiments/final_single.jsonl", "w") as f:
+        for r in single:
+            f.write(json.dumps(r) + "\n")
+    out = []
+    out.append("<!-- generated by benchmarks/finalize.py -->\n")
+    out.append("### Roofline table — single pod (16×16 = 256 chips)\n")
+    out.append(roofline_md(single))
+    out.append("\n\n### Dry-run memory + collective schedule — single pod\n")
+    out.append(dryrun_md(single))
+    out.append("\n\n### Dry-run — multi-pod (2×16×16 = 512 chips, DDP)\n")
+    out.append(dryrun_md(multi))
+    out.append("\n\n### Dry-run — multi-pod CEFL rounds (the paper's "
+               "protocol; ε=2 inner steps per round)\n")
+    out.append(dryrun_md(cefl))
+    text = "\n".join(out)
+    with open("experiments/tables.md", "w") as f:
+        f.write(text)
+    print(text[:2000])
+    print(f"\n[finalize] {len(single)} single, {len(multi)} multi, "
+          f"{len(cefl)} cefl records -> experiments/tables.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared scaled-down FL benchmark configuration.
+
+The paper's full protocol (67 clients × 350 rounds × 8 episodes) takes
+GPU-days; benchmarks run a structurally identical, scaled-down protocol
+(the comm-cost FORMULAS are evaluated at both the benchmark scale and
+the paper's constants — eq. 9 is exact at any scale)."""
+from __future__ import annotations
+
+import functools
+
+from repro.core.fl import FLConfig, FLHarness
+
+BENCH_FL = FLConfig(
+    n_clients=16, k_clusters=2, t_rounds=10, local_episodes=2,
+    transfer_episodes=16, warmup_episodes=1, steps_per_episode=2,
+    data_scale=0.35, eval_every=2, seed=1, heterogeneity=0.6)
+
+# paper constants for the exact eq. 9 accounting
+PAPER_N, PAPER_K, PAPER_T_CEFL, PAPER_T_REG, PAPER_B = 67, 2, 100, 350, 3
+
+
+@functools.lru_cache(maxsize=1)
+def bench_harness() -> FLHarness:
+    return FLHarness(BENCH_FL)

@@ -1,0 +1,64 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.report experiments/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    out = []
+    seen = set()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r["mode"])
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(r)
+    return out
+
+
+def dryrun_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | mode | temp GB/dev | args GB/dev | "
+           "collective schedule (kind×count, link GB once-through) |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        mem = r["memory"]
+        sched = "; ".join(
+            f"{s['kind']}×{s['count']}(g{s['group']}"
+            f"{',DCN' if s['dcn'] else ''})={s['link_bytes']/1e9:.3f}"
+            for s in r["collective_schedule"][:6])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+            f"{mem['temp_bytes']/1e9:.2f} | "
+            f"{mem['argument_bytes']/1e9:.2f} | {sched or '—'} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def roofline_table(recs) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS/HLO ratio |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"**{rf['dominant']}** | {rf['useful_ratio']:.3f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1])
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("both", "dryrun"):
+        print(dryrun_table(recs))
+    if which in ("both", "roofline"):
+        print(roofline_table(recs))

@@ -1,0 +1,43 @@
+"""Quickstart: the CEFL pipeline end-to-end in ~a minute on CPU.
+
+Builds a small federated MobiAct-like corpus, runs the paper's four
+steps (similarity graph → Louvain clustering → leader FL with partial
+aggregation → transfer learning) and prints the accuracy/communication
+trade against Regular FL.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core.fl import FLConfig, FLHarness, run_cefl, run_regular_fl
+
+cfg = FLConfig(
+    n_clients=12,          # paper uses 67 (MobiAct subjects)
+    k_clusters=2,          # paper's optimal K (Fig. 3)
+    t_rounds=8,            # paper uses T=100
+    local_episodes=2,      # paper's ε=8
+    transfer_episodes=12,  # paper's η=350
+    warmup_episodes=1,
+    data_scale=0.4,
+    seed=0,
+)
+
+t0 = time.time()
+h = FLHarness(cfg)
+print(f"built {h.n} clients "
+      f"({[len(c) for c in h.data.clients]} samples each)")
+
+cefl = run_cefl(h)
+reg = run_regular_fl(h)
+
+led = cefl.extras["ledger"]
+print(f"\nclusters: {cefl.extras['labels'].tolist()}")
+print(f"leaders:  {cefl.extras['leaders']}")
+print(f"\n{'':16s}{'accuracy':>10s}{'comm (MB)':>12s}")
+print(f"{'Regular FL':16s}{reg.accuracy:10.3f}{reg.comm_bytes/1e6:12.2f}")
+print(f"{'CEFL':16s}{cefl.accuracy:10.3f}{cefl.comm_bytes/1e6:12.2f}")
+print(f"\nCEFL ledger: clustering={led.clustering_upload/1e6:.2f}MB "
+      f"fl_up={led.fl_upload/1e6:.2f}MB fl_bcast={led.fl_broadcast/1e6:.2f}MB "
+      f"transfer={led.transfer/1e6:.2f}MB")
+print(f"savings: {100*(1 - cefl.comm_bytes/reg.comm_bytes):.2f}% "
+      f"(paper: 98.45%)  [{time.time()-t0:.0f}s]")

@@ -1,0 +1,57 @@
+"""Batched serving example (deliverable b): prefill a prompt batch, then
+greedy-decode continuations with the rolling-buffer KV cache — the same
+prefill/decode_step code path the decode_32k / long_500k dry-run shapes
+lower, including a sliding-window variant and an SSM (state-carrying)
+variant.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.data.lm import synthetic_lm_batch
+from repro.models import transformer as T
+from repro.train.steps import make_decode_fn, make_prefill_fn
+
+
+def serve(arch: str, *, sliding: int | None = None, batch=4, prompt=48,
+          gen=24):
+    cfg = smoke_config(arch)
+    if sliding:
+        cfg = cfg.with_(sliding_window=sliding)
+    window = (prompt + gen) if not sliding else sliding
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_fn(cfg, window))
+    decode = jax.jit(make_decode_fn(cfg))
+
+    toks = jnp.asarray(
+        synthetic_lm_batch(cfg, batch, prompt, seed=1)["tokens"])
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": toks})
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [nxt]
+    for i in range(gen - 1):
+        nxt, _, cache = decode(params, cache, nxt, jnp.int32(prompt + i))
+        out.append(nxt)
+    gen_toks = np.concatenate([np.asarray(t) for t in out], axis=1)
+    dt = time.time() - t0
+    label = f"{arch}" + (f" (sliding={sliding})" if sliding else "")
+    print(f"{label:42s} prefill {prompt:3d} + decode {gen:3d} "
+          f"x batch {batch}: {batch*gen/dt:7.1f} tok/s")
+    # sanity: all generated ids in-vocab, deterministic greedy
+    assert gen_toks.shape == (batch, gen)
+    assert (gen_toks >= 0).all() and (gen_toks < cfg.vocab).all()
+    return gen_toks
+
+
+if __name__ == "__main__":
+    serve("yi-6b")                          # dense GQA, full cache
+    serve("yi-6b", sliding=16)              # rolling-buffer window
+    serve("qwen3-moe-235b-a22b")            # MoE decode (top-8 routing)
+    serve("zamba2-1.2b")                    # hybrid: Mamba2 state + attn
+    serve("xlstm-350m")                     # pure recurrent state
+    print("all serving paths OK")

@@ -1,0 +1,64 @@
+"""End-to-end LM training driver (deliverable b): train a member of the
+yi/llama family on the synthetic Markov token stream and watch held-out
+loss fall.
+
+Defaults are CPU-container-sized (~8M params, ~2 minutes); pass
+``--d-model 768 --layers 12 --vocab 16384`` for the ~100M-param variant
+on real hardware (same code path; the 6B-and-up members of this family
+are exercised via the production dry-run in repro.launch.dryrun).
+
+    PYTHONPATH=src python examples/train_lm_e2e.py [--steps 150]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.data.lm import synthetic_lm_batch, synthetic_lm_stream
+from repro.launch.analytic import param_counts
+from repro.train.steps import (init_train_state, lm_loss, make_train_step,
+                               split_microbatches)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--d-model", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--vocab", type=int, default=2048)
+args = ap.parse_args()
+
+cfg = get_config("yi-6b").with_(
+    n_layers=args.layers, d_model=args.d_model, n_heads=4, n_kv_heads=4,
+    head_dim=64, d_ff=3 * args.d_model, vocab=args.vocab,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    remat=False, microbatch=2, learning_rate=1e-3, zero1=False)
+print(f"model: {param_counts(cfg)['total']/1e6:.1f}M params "
+      f"({cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab})")
+
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+stream = synthetic_lm_stream(cfg, args.batch, args.seq)
+eval_batch = jax.tree.map(jnp.asarray,
+                          synthetic_lm_batch(cfg, 8, args.seq, seed=9999))
+eval_loss = jax.jit(lambda p: lm_loss(cfg, p, eval_batch)[0])
+
+ev0 = float(eval_loss(state.params))
+print(f"held-out loss before training: {ev0:.4f}")
+t0 = time.time()
+for i in range(args.steps):
+    batch = split_microbatches(cfg, jax.tree.map(jnp.asarray, next(stream)))
+    state, m = step(state, batch)
+    if (i + 1) % 30 == 0 or i == args.steps - 1:
+        ev = float(eval_loss(state.params))
+        tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+        print(f"step {i+1:4d}  train {float(m['loss']):7.4f}  "
+              f"eval {ev:7.4f}  {tok_s:8.0f} tok/s")
+
+ev1 = float(eval_loss(state.params))
+print(f"\nheld-out loss {ev0:.3f} -> {ev1:.3f} over {args.steps} steps "
+      f"({time.time()-t0:.0f}s)")
+assert ev1 < ev0, "training must reduce held-out loss"
+print("OK")

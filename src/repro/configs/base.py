@@ -1,0 +1,112 @@
+"""Architecture configuration dataclass + input-shape catalog."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | audio | vlm | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # attention
+    head_dim: int | None = None     # default d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    sliding_window: int | None = None   # rolling-buffer window (set per-shape)
+    mlp_act: str = "silu_gated"     # silu_gated | gelu | relu_sq
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_every: int = 1              # MoE layer frequency (1 = every layer)
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0             # hybrid: shared attn block every k layers
+
+    # xLSTM
+    slstm_at: tuple[int, ...] = ()  # layer indices that are sLSTM blocks
+
+    # modality frontend stub
+    frontend_dim: int = 0           # hubert conv-feature dim / CLIP patch dim
+    n_img_tokens: int = 0           # VLM image tokens prepended
+
+    # numerics / memory policy
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = False
+    scan_layers: bool = True
+
+    # training
+    optimizer: str = "adam"         # adam | adamw | adafactor | sgd
+    learning_rate: float = 1e-4
+    microbatch: int = 1             # grad-accumulation steps for train_4k
+    zero1: bool = False             # ZeRO/FSDP: shard params+opt over data
+
+    # CEFL partial-aggregation policy for this arch
+    base_layers: int | None = None        # B: prefix length of base layers
+    base_predicate: str = "prefix"        # prefix | non_expert
+
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    tie_embeddings: bool = False
+
+    # ---- §Perf hillclimb levers (beyond-paper; default off = baseline)
+    seq_parallel: bool = False      # shard block-input activations' seq dim
+                                    # over `model` (Korthikanti-style SP):
+                                    # divides remat-saved bytes by TP size
+    loss_seq_chunk: int = 0         # compute logits+xe in seq chunks of
+                                    # this size (bounds the (tokens×vocab)
+                                    # fp32 logits buffer); 0 = one shot
+    cache_dtype: Any = None         # KV-cache storage dtype (e.g. fp8);
+                                    # None = compute_dtype
+    moe_dispatch_dtype: Any = None  # a2a dispatch/return precision for
+                                    # expert buffers; None = compute_dtype
+    attn_q_chunk: int = 0           # force flash-style q-chunked attention
+                                    # at this chunk size even for short
+                                    # sequences (bounds the S×S score
+                                    # transient when heads can't shard);
+                                    # 0 = auto (chunks only above 8k)
+
+    citation: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# Sliding window used when a pure full-attention arch runs long_500k.
+LONG_CONTEXT_WINDOW = 8_192

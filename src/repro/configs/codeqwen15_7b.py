@@ -1,0 +1,19 @@
+"""codeqwen1.5-7b [dense]: 32L d_model=4096 32H (GQA kv=32 = MHA)
+d_ff=13440 vocab=92416 — qwen1.5 arch, QKV bias [hf:Qwen/CodeQwen1.5-7B].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13440, vocab=92416,
+    qkv_bias=True, rope_theta=1e6,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=8, zero1=True,
+    # §Perf levers: train_4k temp 23.0 -> 3.6 GB/dev
+    seq_parallel=True, loss_seq_chunk=1024,
+    base_layers=16,
+    citation="[hf:Qwen/CodeQwen1.5-7B]",
+)

@@ -1,0 +1,26 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+d_ff is the per-expert intermediate size.  24 heads do not divide the
+16-way model mesh axis — the sharding rules fall back per DESIGN.md §5
+(head axis replicated; mlp/expert axes sharded).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", arch_type="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155,
+    n_experts=40, experts_per_token=8,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=16, zero1=True,
+    # §Perf hillclimb outcome (EXPERIMENTS.md): 24 heads can't shard over
+    # the 16-way model axis → q-chunked attention bounds the replicated
+    # S×S scores; chunked+checkpointed loss bounds the fp32 logits.
+    # train_4k temp: 3214 GB/dev (naive) → 15.4 GB/dev (fits v5e).
+    attn_q_chunk=512, loss_seq_chunk=1024,
+    base_predicate="non_expert", base_layers=16,
+    citation="[hf:ibm-granite/granite-3.0-1b-a400m-base]",
+)

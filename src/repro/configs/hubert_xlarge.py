@@ -1,0 +1,25 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (GQA kv=16) d_ff=5120
+vocab=504 — encoder-only, same arch as wav2vec2 [arXiv:2106.07447].
+
+Backbone only: the conv waveform feature extractor is a stub; inputs are
+precomputed 512-d frame embeddings (the conv encoder's output dim in the
+HuBERT paper), projected to d_model.  Training objective is framewise
+prediction over the 504 k-means cluster vocabulary (we predict all
+frames; the paper masks — noted simplification).  Encoder-only ⇒ no
+decode step: decode_32k / long_500k are skipped (DESIGN.md §4).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", arch_type="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab=504,
+    causal=False, norm="layernorm", mlp_act="gelu",
+    frontend_dim=512,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=8,
+    base_layers=24,
+    citation="[arXiv:2106.07447]",
+)

@@ -1,0 +1,25 @@
+"""nemotron-4-340b [dense]: 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000 — GQA, squared-ReLU MLP [arXiv:2402.16819].
+
+340B params: unfactored Adam state (≥12 B/param) exceeds a single v5e
+pod's 4 TB HBM — config uses bf16 params + factored Adafactor second
+moment and remat; the single-pod memory analysis in EXPERIMENTS.md
+§Dry-run documents the margin.  head_dim = 18432/96 = 192.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b", arch_type="dense",
+    n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8,
+    d_ff=73728, vocab=256000,
+    mlp_act="relu_sq", norm="layernorm",
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adafactor", remat=True, microbatch=16, zero1=True,
+    # §Perf levers: train_4k temp 71.1 -> 27.8 GB/dev (still >16 GB;
+    # needs >=4 pods with pod-extended ZeRO - EXPERIMENTS.md pair C)
+    seq_parallel=True, loss_seq_chunk=1024,
+    base_layers=48,
+    citation="[arXiv:2402.16819]",
+)

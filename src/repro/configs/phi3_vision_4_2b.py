@@ -1,0 +1,24 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — phi3-mini decoder + CLIP vision frontend
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+The CLIP ViT-L/14 image encoder is a stub per the assignment carve-out:
+inputs carry 576 precomputed 1024-d patch embeddings which the trained
+projector maps into the token stream ahead of the text tokens.  Total
+sequence length (image + text tokens) equals the input-shape seq_len.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", arch_type="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32064,
+    frontend_dim=1024, n_img_tokens=576,
+    rope_theta=10_000.0,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=8,
+    base_layers=16,
+    citation="[hf:microsoft/Phi-3-vision-128k-instruct]",
+)

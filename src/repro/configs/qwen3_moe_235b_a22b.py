@@ -1,0 +1,27 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+vocab=151936, MoE 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+d_ff is the per-expert intermediate size.  head_dim=128 (64×128 > d_model,
+as in Qwen3).  Trains with factored Adafactor second moment + bf16 params
+so optimizer state fits v5e HBM (DESIGN.md §8).  CEFL partial aggregation
+uses the ``non_expert`` base predicate: experts are the personalized
+layers — the dominant byte volume stays out of the global sync.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", arch_type="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936,
+    n_experts=128, experts_per_token=8,
+    rope_theta=1e6,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adafactor", remat=True, microbatch=16, zero1=True,
+    # §Perf: seq-parallel + chunked loss; fp8 a2a dispatch stays opt-in
+    # (--set moe_dispatch_dtype=fp8: collective 68->45 s, temp -17 GB)
+    seq_parallel=True, loss_seq_chunk=1024,
+    base_predicate="non_expert", base_layers=47,
+    citation="[hf:Qwen/Qwen3-30B-A3B]",
+)

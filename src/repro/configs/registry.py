@@ -1,0 +1,105 @@
+"""Architecture registry: ``--arch <id>`` resolution + smoke reduction."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import (codeqwen15_7b, granite_moe_3b_a800m,
+                           hubert_xlarge, nemotron_4_340b,
+                           phi3_vision_4_2b, qwen25_32b,
+                           qwen3_moe_235b_a22b, xlstm_350m, yi_6b,
+                           zamba2_1_2b)
+from repro.configs.base import INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig
+from repro.models.fd_cnn import FD_CNN_CONFIG
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in (
+        hubert_xlarge.CONFIG,
+        qwen3_moe_235b_a22b.CONFIG,
+        yi_6b.CONFIG,
+        granite_moe_3b_a800m.CONFIG,
+        xlstm_350m.CONFIG,
+        nemotron_4_340b.CONFIG,
+        codeqwen15_7b.CONFIG,
+        qwen25_32b.CONFIG,
+        zamba2_1_2b.CONFIG,
+        phi3_vision_4_2b.CONFIG,
+        FD_CNN_CONFIG,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    for key in (name, name.replace("_", "-")):
+        if key in ARCHS:
+            return ARCHS[key]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+# (arch, shape) applicability.  Skips are documented in DESIGN.md §4.
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    if cfg.arch_type == "cnn":
+        return []                       # FD-CNN runs the FL harness, not LM shapes
+    if cfg.arch_type == "audio":        # encoder-only: no decode step
+        return ["train_4k", "prefill_32k"]
+    return list(INPUT_SHAPES)
+
+
+def shape_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Per-shape config adjustments (sliding window for long-context dense)."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and cfg.arch_type in ("dense", "vlm", "moe"):
+        # full attention at 524k cache is infeasible → rolling-buffer window
+        return cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def decode_window(cfg: ModelConfig, shape_name: str) -> int:
+    """KV-cache buffer length for decode shapes."""
+    shape = INPUT_SHAPES[shape_name]
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model ≤ 512, ≤ 4 experts.
+
+    Used by per-arch CPU smoke tests (one forward/train step, real
+    allocation); the FULL configs are exercised only via the dry-run.
+    """
+    cfg = get_config(name)
+    kw: dict = dict(
+        n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=64,
+        d_ff=0 if cfg.d_ff == 0 else 512,
+        vocab=512,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        remat=False, microbatch=1,
+        base_layers=1,
+        # reset perf levers: smoke tests exercise the plain paths (the
+        # levers have their own dedicated equivalence tests)
+        seq_parallel=False, loss_seq_chunk=0, attn_q_chunk=0,
+        cache_dtype=None, moe_dispatch_dtype=None, zero1=False,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=4, experts_per_token=2)
+    if cfg.arch_type == "ssm":
+        kw.update(slstm_at=(1,), ssm_chunk=8)
+    if cfg.arch_type == "hybrid":
+        kw.update(attn_every=1, ssm_state=16, ssm_head_dim=32, ssm_chunk=8)
+    if cfg.arch_type == "audio":
+        kw.update(frontend_dim=32)
+    if cfg.arch_type == "vlm":
+        kw.update(frontend_dim=32, n_img_tokens=4)
+    return cfg.with_(**kw)
+
+
+def smoke_shapes(cfg: ModelConfig) -> dict[str, tuple[int, int]]:
+    """(batch, seq) per applicable shape-kind for smoke tests."""
+    out = {"train": (2, 16), "prefill": (2, 16)}
+    if cfg.arch_type != "audio":
+        out["decode"] = (2, 16)
+    return out

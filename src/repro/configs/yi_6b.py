@@ -1,0 +1,19 @@
+"""yi-6b [dense]: 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000
+— llama-arch GQA [arXiv:2403.04652].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+    d_ff=11008, vocab=64000,
+    rope_theta=5e6,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=8, zero1=True,
+    # §Perf levers (EXPERIMENTS.md): train_4k temp 23.0 -> 2.8 GB/dev
+    seq_parallel=True, loss_seq_chunk=1024,
+    base_layers=16,
+    citation="[arXiv:2403.04652]",
+)

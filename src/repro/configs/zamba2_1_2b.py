@@ -1,0 +1,27 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention block
+[arXiv:2411.15242].
+
+The single shared attention+MLP block (d_ff=8192) is applied every 6
+Mamba2 layers with shared parameters, as in Zamba2.  Mamba2 state is
+O(1) in sequence ⇒ long_500k runs natively (shared attention uses a
+rolling window there).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", arch_type="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+    attn_every=6,
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    optimizer="adamw", remat=True, microbatch=16,
+    # §Perf levers: train_4k temp 79.0 -> 10.6 GB/dev
+    loss_seq_chunk=1024,
+    scan_layers=False,
+    base_layers=19,
+    citation="[arXiv:2411.15242]",
+)

@@ -1,0 +1,311 @@
+"""Federated-learning orchestrators: CEFL (paper Algorithm 1 + transfer
+session) and the three baselines of Table I (Regular FL, FedPer,
+Individual Training), over FD-CNN + synthetic MobiAct.
+
+TPU-native structure: all N clients' models live as ONE client-stacked
+pytree (leading dim N) and local training is a single `vmap`ped SPMD
+program — batching many tiny models instead of looping (DESIGN.md §3).
+
+An "episode" is ``steps_per_episode`` minibatch Adam steps on the
+client's own data (the paper's episode ≈ local epoch; datasets are
+small so a few steps ≈ one epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_cost as CC
+from repro.core.louvain import cluster_clients
+from repro.core.partition import fd_cnn_mask, masked_interpolate
+from repro.core.similarity import (layer_flatten, select_leader,
+                                   similarity_graph)
+from repro.data.mobiact import SyntheticMobiAct, make_client_datasets
+from repro.models import fd_cnn as F
+from repro.models.base import init_params
+from repro.optim.optimizers import make_optimizer
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_clients: int = 67
+    k_clusters: int = 2
+    t_rounds: int = 100            # T: FL rounds
+    local_episodes: int = 8        # ε: episodes per FL round
+    transfer_episodes: int = 350   # η: member fine-tune budget
+    warmup_episodes: int = 2       # pre-clustering local training
+    steps_per_episode: int = 4
+    batch_size: int = 32
+    lr: float = 1e-4
+    base_layers: int = 2           # B (of FD-CNN's 4 CEFL layers)
+    seed: int = 0
+    heterogeneity: float = 0.5
+    data_scale: float = 1.0
+    use_kernel: bool = False       # Pallas pairwise-distance kernel
+    eval_every: int = 5
+
+
+# ---------------------------------------------------------------- harness
+
+
+class FLHarness:
+    """Shared machinery: stacked client params, vmapped local training."""
+
+    def __init__(self, cfg: FLConfig, data: SyntheticMobiAct | None = None):
+        self.cfg = cfg
+        self.data = data or make_client_datasets(
+            cfg.n_clients, cfg.seed, cfg.heterogeneity, cfg.data_scale)
+        self.n = len(self.data.clients)
+        self.opt = make_optimizer("adam")
+        self.rng = np.random.RandomState(cfg.seed + 7)
+
+        # Conventional FL: every client starts from the SAME server-
+        # broadcast initialization (paper §III).  This also makes the
+        # similarity graph meaningful — post-warm-up weight distances then
+        # reflect the clients' data, not their random inits (eq. 3).
+        key = jax.random.PRNGKey(cfg.seed)
+        specs = F.fd_cnn_specs()
+        one = init_params(specs, key)
+        self.params0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n,) + x.shape), one)
+        self.opt0 = jax.vmap(self.opt.init)(self.params0)
+
+        self._train_many = jax.jit(self._make_train_many())
+        self._eval_one = jax.jit(F.fd_cnn_accuracy)
+        self.test_batch = {"x": jnp.asarray(self.data.test_x),
+                           "y": jnp.asarray(self.data.test_y)}
+        self.sizes = np.array([len(c) for c in self.data.clients], np.float32)
+
+    # ------------------------------------------------------ local training
+
+    def _make_train_many(self):
+        opt, lr = self.opt, self.cfg.lr
+
+        def one_client(params, opt_state, xs, ys):
+            def step(carry, b):
+                p, s = carry
+                loss, g = jax.value_and_grad(F.fd_cnn_loss)(
+                    p, {"x": b[0], "y": b[1]})
+                p, s = opt.update(g, s, p, lr)
+                return (p, s), loss
+            (params, opt_state), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys))
+            return params, opt_state, losses.mean()
+
+        return jax.vmap(one_client)
+
+    def sample_batches(self, episodes: int, client_ids=None):
+        """(N, steps, batch, ...) stacked minibatches from each client."""
+        cfg = self.cfg
+        ids = range(self.n) if client_ids is None else client_ids
+        steps = episodes * cfg.steps_per_episode
+        xs, ys = [], []
+        for i in ids:
+            c = self.data.clients[i]
+            sel = self.rng.randint(0, len(c), size=(steps, cfg.batch_size))
+            xs.append(c.x[sel])
+            ys.append(c.y[sel])
+        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+    def local_train(self, params, opt_state, episodes: int, client_ids=None):
+        xs, ys = self.sample_batches(episodes, client_ids)
+        return self._train_many(params, opt_state, xs, ys)
+
+    # ---------------------------------------------------------- evaluation
+
+    def eval_all(self, stacked_params) -> np.ndarray:
+        """Per-client accuracy on the shared test set."""
+        accs = jax.vmap(lambda p: self._eval_one(p, self.test_batch))(
+            stacked_params)
+        return np.asarray(accs)
+
+    # --------------------------------------------------------- aggregation
+
+    @staticmethod
+    def aggregate(stacked, weights):
+        """Eq. 2/6: weighted average over the leading client dim."""
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / w.sum()
+        return jax.tree.map(
+            lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1
+                                    ).astype(x.dtype), stacked)
+
+    @staticmethod
+    def broadcast(avg, n):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), avg)
+
+    @staticmethod
+    def gather(stacked, ids):
+        idx = jnp.asarray(ids)
+        return jax.tree.map(lambda x: x[idx], stacked)
+
+    @staticmethod
+    def scatter(stacked, ids, values):
+        idx = jnp.asarray(ids)
+        return jax.tree.map(lambda x, v: x.at[idx].set(v), stacked, values)
+
+
+# ------------------------------------------------------------ the methods
+
+
+@dataclasses.dataclass
+class FLResult:
+    name: str
+    accuracy: float                  # mean client accuracy, final
+    per_client: np.ndarray
+    history: list[tuple[int, float]]     # (episode-count, mean acc)
+    comm_bytes: int
+    episodes: int
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+def _layer_bytes() -> list[int]:
+    return list(F.layer_sizes_bytes().values())
+
+
+def run_regular_fl(h: FLHarness, t_rounds: int | None = None) -> FLResult:
+    cfg = h.cfg
+    T = t_rounds or cfg.t_rounds
+    params, opt_state = h.params0, h.opt0
+    weights = h.sizes
+    history = []
+    for t in range(T):
+        params, opt_state, _ = h.local_train(params, opt_state,
+                                             cfg.local_episodes)
+        avg = h.aggregate(params, weights)
+        params = h.broadcast(avg, h.n)
+        if t % cfg.eval_every == 0 or t == T - 1:
+            history.append(((t + 1) * cfg.local_episodes,
+                            float(h.eval_all(params).mean())))
+    per = h.eval_all(params)
+    return FLResult("regular_fl", float(per.mean()), per, history,
+                    CC.regular_fl_cost(_layer_bytes(), h.n, T),
+                    T * cfg.local_episodes)
+
+
+def run_fedper(h: FLHarness, t_rounds: int | None = None) -> FLResult:
+    cfg = h.cfg
+    T = t_rounds or cfg.t_rounds
+    params, opt_state = h.params0, h.opt0
+    mask = fd_cnn_mask(jax.tree.map(lambda x: x[0], params), cfg.base_layers)
+    history = []
+    for t in range(T):
+        params, opt_state, _ = h.local_train(params, opt_state,
+                                             cfg.local_episodes)
+        avg = h.aggregate(params, h.sizes)
+        bcast = h.broadcast(avg, h.n)
+        # only base layers are replaced; personalized stay local (FedPer)
+        params = jax.tree.map(
+            lambda m, a, b: (m * a.astype(jnp.float32)
+                             + (1 - m) * b.astype(jnp.float32)).astype(a.dtype),
+            _stack_mask(mask, h.n), bcast, params)
+        if t % cfg.eval_every == 0 or t == T - 1:
+            history.append(((t + 1) * cfg.local_episodes,
+                            float(h.eval_all(params).mean())))
+    per = h.eval_all(params)
+    return FLResult("fedper", float(per.mean()), per, history,
+                    CC.fedper_cost(_layer_bytes(), h.n, T, cfg.base_layers),
+                    T * cfg.local_episodes)
+
+
+def run_individual(h: FLHarness, episodes: int | None = None) -> FLResult:
+    cfg = h.cfg
+    E = episodes or cfg.transfer_episodes
+    params, opt_state = h.params0, h.opt0
+    history = []
+    chunk = max(cfg.eval_every * cfg.local_episodes, 8)
+    done = 0
+    while done < E:
+        e = min(chunk, E - done)
+        params, opt_state, _ = h.local_train(params, opt_state, e)
+        done += e
+        history.append((done, float(h.eval_all(params).mean())))
+    per = h.eval_all(params)
+    return FLResult("individual", float(per.mean()), per, history,
+                    CC.individual_cost(), E)
+
+
+def _stack_mask(mask, n):
+    return jax.tree.map(lambda m: m, mask)   # scalars broadcast over stack
+
+
+def run_cefl(h: FLHarness, t_rounds: int | None = None,
+             k: int | None = None) -> FLResult:
+    """Paper Algorithm 1 + §IV-B transfer session."""
+    cfg = h.cfg
+    T = t_rounds or cfg.t_rounds
+    K = k or cfg.k_clusters
+    params, opt_state = h.params0, h.opt0
+    history = []
+
+    # --- init: short local training, then similarity graph (Steps 1-2)
+    params, opt_state, _ = h.local_train(params, opt_state,
+                                         cfg.warmup_episodes)
+    layer_trees = [params[name] for name in F.FD_CNN_LAYER_ORDER]
+    S = np.asarray(similarity_graph(layer_flatten(params, layer_trees),
+                                    use_kernel=cfg.use_kernel))
+    labels = cluster_clients(S, K, cfg.seed)
+    K = labels.max() + 1
+
+    # --- Step 3: leader selection (eq. 5)
+    clusters = [list(np.where(labels == c)[0]) for c in range(K)]
+    leaders = [select_leader(S, m) for m in clusters]
+
+    # --- FL among leaders with partial aggregation (Step 4, eq. 6-7)
+    mask = fd_cnn_mask(jax.tree.map(lambda x: x[0], params), cfg.base_layers)
+    lp = h.gather(params, leaders)
+    lo = h.gather(opt_state, leaders)
+    a_k = np.ones(K, np.float32) / K           # paper: a_k = 1/K
+    episodes = cfg.warmup_episodes
+    for t in range(T):
+        lp, lo, _ = h.local_train(lp, lo, cfg.local_episodes, leaders)
+        episodes += cfg.local_episodes
+        avg = h.aggregate(lp, a_k)             # eq. 6 over base layers
+        bcast = h.broadcast(avg, K)
+        lp = jax.tree.map(                     # eq. 7: replace base only
+            lambda m, a, b: (m * a.astype(jnp.float32)
+                             + (1 - m) * b.astype(jnp.float32)).astype(a.dtype),
+            _stack_mask(mask, K), bcast, lp)
+        if t % cfg.eval_every == 0 or t == T - 1:
+            accs = h.eval_all(lp)
+            history.append((episodes, float(accs.mean())))
+
+    # --- transfer session (eq. 8): members inherit leader's full model
+    leader_of = np.array([leaders[labels[i]] for i in range(h.n)])
+    src = jnp.asarray(leader_of)
+    params = h.scatter(params, list(range(h.n)),
+                       jax.tree.map(lambda x: x[src],
+                                    h.scatter(params, leaders, lp)))
+    # members fine-tune on their own data (leaders keep their FL model)
+    member_ids = [i for i in range(h.n) if i not in set(leaders)]
+    opt_state = jax.vmap(h.opt.init)(params)     # fresh fine-tune state
+    fine = cfg.transfer_episodes
+    chunk = max(cfg.eval_every * cfg.local_episodes, 8)
+    done = 0
+    while done < fine:
+        e = min(chunk, fine - done)
+        new_p, new_o, _ = h.local_train(params, opt_state, e)
+        # only members adopt the fine-tuned weights
+        mask_members = np.zeros(h.n, np.float32)
+        mask_members[member_ids] = 1.0
+        mm = jnp.asarray(mask_members)
+        params = jax.tree.map(
+            lambda a, b: (mm.reshape((-1,) + (1,) * (a.ndim - 1)) * a.astype(jnp.float32)
+                          + (1 - mm.reshape((-1,) + (1,) * (a.ndim - 1))) * b.astype(jnp.float32)
+                          ).astype(a.dtype), new_p, params)
+        opt_state = new_o
+        done += e
+        history.append((episodes + done, float(h.eval_all(params).mean())))
+
+    per = h.eval_all(params)
+    ledger = CC.cefl_cost(_layer_bytes(), h.n, int(K), T, cfg.base_layers)
+    return FLResult("cefl", float(per.mean()), per, history,
+                    ledger.total, episodes + fine,
+                    extras={"ledger": ledger, "labels": labels,
+                            "leaders": leaders, "similarity": S})

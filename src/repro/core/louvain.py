@@ -1,0 +1,158 @@
+"""Step 2 of CEFL: Louvain community detection [Blondel et al. 2008]
+on the weighted similarity graph, constrained to K clusters.
+
+Pure-host implementation (the graph has N ≤ a few hundred vertices; the
+device-side work is the similarity matrix, not the O(E) greedy sweep).
+
+The paper specifies "the number of clusters needs to be specified
+according to the demand" — vanilla Louvain maximizes modularity with a
+free community count, so we post-process:
+  * more than K communities → greedily merge the pair with the best
+    (least-bad) modularity change until K remain;
+  * fewer than K → split the loosest community by 2-medoid partition on
+    the similarity rows until K remain.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def modularity(S: np.ndarray, labels: np.ndarray) -> float:
+    """Weighted-graph modularity of a partition."""
+    W = S.copy().astype(np.float64)
+    np.fill_diagonal(W, 0.0)
+    m2 = W.sum()
+    if m2 <= 0:
+        return 0.0
+    k = W.sum(axis=1)
+    q = 0.0
+    for c in np.unique(labels):
+        idx = labels == c
+        q += W[np.ix_(idx, idx)].sum() / m2 - (k[idx].sum() / m2) ** 2
+    return float(q)
+
+
+def _louvain_pass(W: np.ndarray, rng: np.random.RandomState):
+    """One level of local moves.  Returns community labels."""
+    n = W.shape[0]
+    m2 = W.sum()
+    k = W.sum(axis=1)
+    labels = np.arange(n)
+    improved = True
+    sweeps = 0
+    while improved and sweeps < 50:
+        improved = False
+        sweeps += 1
+        for i in rng.permutation(n):
+            li = labels[i]
+            # weights from i to each community
+            neigh = {}
+            for j in range(n):
+                if j != i and W[i, j] != 0.0:
+                    neigh[labels[j]] = neigh.get(labels[j], 0.0) + W[i, j]
+            if not neigh:
+                continue
+            # degree sums per community (excluding i)
+            best_c, best_gain = li, 0.0
+            ki = k[i]
+            sum_li = sum(k[j] for j in range(n)
+                         if labels[j] == li and j != i)
+            base = neigh.get(li, 0.0) - ki * sum_li / m2
+            for c, w_ic in neigh.items():
+                if c == li:
+                    continue
+                sum_c = sum(k[j] for j in range(n) if labels[j] == c)
+                gain = (w_ic - ki * sum_c / m2) - base
+                if gain > best_gain + 1e-12:
+                    best_gain, best_c = gain, c
+            if best_c != li:
+                labels[i] = best_c
+                improved = True
+    # compact labels
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels
+
+
+def louvain(S: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Multi-level Louvain on similarity matrix S (diagonal ignored)."""
+    W = np.asarray(S, np.float64).copy()
+    np.fill_diagonal(W, 0.0)
+    W = np.maximum(W, 0.0)          # similarity weights are ≥ 0 by eq. 4
+    rng = np.random.RandomState(seed)
+    n = W.shape[0]
+    node_labels = np.arange(n)
+
+    cur = W
+    best_q = modularity(S, node_labels)
+    best_labels = node_labels.copy()
+    for _level in range(10):
+        labels = _louvain_pass(cur, rng)
+        trial = labels[node_labels]
+        nc = labels.max() + 1
+        q = modularity(S, trial)
+        if q <= best_q + 1e-12:     # no modularity improvement → stop
+            break
+        best_q, best_labels = q, trial.copy()
+        node_labels = trial
+        if nc == cur.shape[0] or nc == 1:
+            break
+        # aggregate graph, KEEPING intra-community weight as self-loops
+        # (dropping them makes every further merge look free)
+        agg = np.zeros((nc, nc))
+        for a in range(cur.shape[0]):
+            for b in range(cur.shape[0]):
+                agg[labels[a], labels[b]] += cur[a, b]
+        cur = agg
+    _, best_labels = np.unique(best_labels, return_inverse=True)
+    return best_labels
+
+
+def _merge_to_k(S: np.ndarray, labels: np.ndarray, k: int) -> np.ndarray:
+    labels = labels.copy()
+    while labels.max() + 1 > k:
+        best = None
+        ncur = labels.max() + 1
+        for a in range(ncur):
+            for b in range(a + 1, ncur):
+                trial = labels.copy()
+                trial[trial == b] = a
+                trial[trial > b] -= 1
+                q = modularity(S, trial)
+                if best is None or q > best[0]:
+                    best = (q, trial)
+        labels = best[1]
+    return labels
+
+
+def _split_to_k(S: np.ndarray, labels: np.ndarray, k: int,
+                rng: np.random.RandomState) -> np.ndarray:
+    labels = labels.copy()
+    while labels.max() + 1 < k:
+        # split the largest community by 2-medoid on similarity rows
+        sizes = np.bincount(labels)
+        target = int(np.argmax(sizes))
+        members = np.where(labels == target)[0]
+        if len(members) < 2:
+            break
+        sub = S[np.ix_(members, members)]
+        # farthest pair as medoids (least similar)
+        a, b = np.unravel_index(np.argmin(sub + np.eye(len(members)) * sub.max()),
+                                sub.shape)
+        assign_b = sub[:, b] > sub[:, a]
+        new_label = labels.max() + 1
+        labels[members[assign_b]] = new_label
+    return labels
+
+
+def cluster_clients(S: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """Louvain constrained to exactly K communities (CEFL Step 2)."""
+    S = np.asarray(S, np.float64)
+    n = S.shape[0]
+    k = min(k, n)
+    labels = louvain(S, seed)
+    if labels.max() + 1 > k:
+        labels = _merge_to_k(S, labels, k)
+    elif labels.max() + 1 < k:
+        labels = _split_to_k(S, labels, k, np.random.RandomState(seed))
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels

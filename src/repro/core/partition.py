@@ -1,0 +1,103 @@
+"""Step 4 of CEFL: base / personalized parameter partition (eq. 6–7).
+
+A partition is represented as a *mask pytree* matching the parameter
+pytree: each leaf is a float (0./1.) array broadcastable against the
+parameter leaf (scalar for unstacked leaves, (L,1,...) for scan-stacked
+block leaves).  ``1.`` = base layer → participates in FL aggregation;
+``0.`` = personalized → stays local.
+
+Two predicates:
+  * ``prefix``     — the paper's: the first B layers are base (plus the
+                     input embedding / frontend); final norm + LM head
+                     are personalized.
+  * ``non_expert`` — MoE refinement (DESIGN.md §4): everything except
+                     expert weights is base; experts are personalized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.fd_cnn import FD_CNN_LAYER_ORDER
+
+EXPERT_KEYS = ("wi", "wg", "wo")        # under a "moe" subtree
+
+
+def _ones_like_mask(leaf):
+    return jnp.ones((1,) * 0, jnp.float32)  # scalar 1.
+
+
+def fd_cnn_mask(params, base_layers: int):
+    """Prefix-B mask over FD-CNN's named layer order.
+
+    Masks are NUMPY trees (trace-time constants): the sharded CEFL sync
+    makes static skip decisions from them inside jit."""
+    base = set(FD_CNN_LAYER_ORDER[:base_layers])
+    return {name: jax.tree.map(lambda _: np.float32(1.0 if name in base else 0.0),
+                               sub)
+            for name, sub in params.items()}
+
+
+def transformer_mask(cfg: ModelConfig, params):
+    """Mask pytree for a zoo architecture (stacked or per-layer blocks)."""
+    B = cfg.base_layers if cfg.base_layers is not None else cfg.n_layers // 2
+    mask = {}
+    for key, sub in params.items():
+        if key == "blocks":
+            mask[key] = _blocks_mask(cfg, sub, B)
+        elif key in ("embed", "frontend_proj", "img_proj"):
+            mask[key] = jax.tree.map(lambda _: np.float32(1.0), sub)
+        elif key == "shared_attn":     # zamba2 shared block: global → base
+            mask[key] = jax.tree.map(lambda _: np.float32(1.0), sub)
+        else:                          # final_norm, head → personalized
+            mask[key] = jax.tree.map(lambda _: np.float32(0.0), sub)
+    return mask
+
+
+def _blocks_mask(cfg: ModelConfig, blocks, B: int):
+    if isinstance(blocks, list):       # per-layer blocks (xlstm / zamba2)
+        def layer_mask(i, sub):
+            v = np.float32(1.0 if i < B else 0.0)
+            return jax.tree.map(lambda _: v, sub)
+        return [layer_mask(i, sub) for i, sub in enumerate(blocks)]
+
+    # scan-stacked: leaves have leading L dim → per-layer (L,1,...) masks
+    L = cfg.n_layers
+    prefix = (np.arange(L) < B).astype(np.float32)
+
+    def leaf_mask(path, leaf):
+        keys = [getattr(p, "key", "") for p in path]
+        if cfg.base_predicate == "non_expert" and "moe" in keys and \
+                keys[-1] in EXPERT_KEYS:
+            return np.zeros((L,) + (1,) * (leaf.ndim - 1), np.float32)
+        vec = prefix if cfg.base_predicate == "prefix" else \
+            np.ones((L,), np.float32)
+        return vec.reshape((L,) + (1,) * (leaf.ndim - 1))
+
+    return jax.tree_util.tree_map_with_path(leaf_mask, blocks)
+
+
+def param_mask(cfg: ModelConfig, params):
+    if cfg.arch_type == "cnn":
+        return fd_cnn_mask(params, cfg.base_layers or 2)
+    return transformer_mask(cfg, params)
+
+
+def masked_interpolate(mask, new, old):
+    """new where mask==1 else old (eq. 7 broadcast over stacked layers)."""
+    return jax.tree.map(
+        lambda m, a, b: (m * a.astype(jnp.float32)
+                         + (1.0 - m) * b.astype(jnp.float32)).astype(a.dtype),
+        mask, new, old)
+
+
+def mask_fraction(mask, params) -> float:
+    """Fraction of parameter *bytes* covered by the base mask (→ eq. 9)."""
+    tot, base = 0.0, 0.0
+    for m, p in zip(jax.tree.leaves(mask), jax.tree.leaves(params)):
+        n = float(np.prod(p.shape))
+        tot += n
+        base += float(np.mean(np.asarray(m, np.float32))) * n
+    return base / tot

@@ -1,0 +1,105 @@
+"""Related-work baselines the paper positions against (§II):
+
+* **FedPAQ** [Reisizadeh et al. 2020]: partial participation + periodic
+  averaging of QUANTIZED model updates — per round a fraction r of
+  clients uploads b-bit-quantized deltas.
+* **CMFL** [Luping et al. 2019]: clients upload only updates whose sign
+  pattern agrees with the previous global update direction above a
+  relevance threshold.
+
+Both reuse the FLHarness (same vmapped local training, same data), so
+Table-I-style comparisons are apples-to-apples with CEFL.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fl import FLHarness, FLResult, _layer_bytes
+
+
+def _quantize_delta(delta, bits: int):
+    """Uniform symmetric quantization of an update pytree."""
+    def q(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        levels = 2 ** (bits - 1) - 1
+        return jnp.round(x / s * levels) / levels * s
+    return jax.tree.map(q, delta)
+
+
+def run_fedpaq(h: FLHarness, t_rounds: int | None = None,
+               participation: float = 0.5, bits: int = 8) -> FLResult:
+    cfg = h.cfg
+    T = t_rounds or cfg.t_rounds
+    params, opt_state = h.params0, h.opt0
+    rng = np.random.RandomState(cfg.seed + 11)
+    history = []
+    full = sum(_layer_bytes())
+    comm = 0
+    for t in range(T):
+        k = max(1, int(participation * h.n))
+        sel = rng.choice(h.n, size=k, replace=False)
+        new_p, new_o, _ = h.local_train(params, opt_state, cfg.local_episodes)
+        # only selected clients contribute; their deltas are quantized
+        delta = jax.tree.map(lambda n, p: n - p, h.gather(new_p, sel),
+                             h.gather(params, sel))
+        qdelta = _quantize_delta(delta, bits)
+        upd = jax.tree.map(lambda d: jnp.mean(d, axis=0), qdelta)
+        avg = jax.tree.map(lambda g, d: (jnp.mean(g, 0) + d).astype(g.dtype),
+                           params, upd)
+        params = h.broadcast(avg, h.n)
+        opt_state = new_o
+        comm += k * full * bits // 32 + h.n * full   # quantized up, full down
+        if t % cfg.eval_every == 0 or t == T - 1:
+            history.append(((t + 1) * cfg.local_episodes,
+                            float(h.eval_all(params).mean())))
+    per = h.eval_all(params)
+    return FLResult("fedpaq", float(per.mean()), per, history, comm,
+                    T * cfg.local_episodes,
+                    extras={"participation": participation, "bits": bits})
+
+
+def run_cmfl(h: FLHarness, t_rounds: int | None = None,
+             threshold: float = 0.5) -> FLResult:
+    cfg = h.cfg
+    T = t_rounds or cfg.t_rounds
+    params, opt_state = h.params0, h.opt0
+    history = []
+    full = sum(_layer_bytes())
+    comm = 0
+    prev_dir = None
+    uploaded_counts = []
+    for t in range(T):
+        new_p, new_o, _ = h.local_train(params, opt_state, cfg.local_episodes)
+        prev_global = jax.tree.map(lambda x: np.asarray(x[0]), params)
+        delta = jax.tree.map(lambda n, p: n - p, new_p, params)
+        if prev_dir is None:
+            keep = np.ones(h.n, bool)
+        else:
+            # per-client sign-agreement with the previous global direction
+            agree = np.zeros(h.n)
+            num = 0
+            for d, g in zip(jax.tree.leaves(delta), jax.tree.leaves(prev_dir)):
+                d2 = np.asarray(d).reshape(h.n, -1)
+                g2 = np.sign(np.asarray(g).reshape(-1))[None, :]
+                agree += (np.sign(d2) == g2).sum(axis=1)
+                num += d2.shape[1]
+            keep = (agree / num) >= threshold
+            if not keep.any():
+                keep[np.argmax(agree)] = True
+        w = h.sizes * keep
+        avg = h.aggregate(new_p, w)
+        prev_dir = jax.tree.map(lambda a, g: np.asarray(a) - g,
+                                avg, prev_global)
+        params = h.broadcast(avg, h.n)
+        opt_state = new_o
+        comm += int(keep.sum()) * full + h.n * full
+        uploaded_counts.append(int(keep.sum()))
+        if t % cfg.eval_every == 0 or t == T - 1:
+            history.append(((t + 1) * cfg.local_episodes,
+                            float(h.eval_all(params).mean())))
+    per = h.eval_all(params)
+    return FLResult("cmfl", float(per.mean()), per, history, comm,
+                    T * cfg.local_episodes,
+                    extras={"uploaded_per_round": uploaded_counts})

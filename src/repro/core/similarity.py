@@ -1,0 +1,75 @@
+"""Step 1 of CEFL: the clients' similarity graph (paper eq. 3–4).
+
+Given N clients' model weights, the similarity factor of clients i, j is
+
+    d_ij = Σ_l ‖ω_i^l − ω_j^l‖₂            (eq. 3, per-layer Euclidean)
+    S_ij = −d_ij + d_min + d_max            (eq. 4)
+
+so large S = similar.  The O(N²·P) distance computation is the compute
+hot-spot of the clustering step; it is evaluated through the Gram trick
+‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b so the N×P @ P×N product hits the MXU — the
+Pallas kernel in ``repro.kernels.pairwise_dist`` implements exactly this
+contraction tiled for VMEM; this module is the jnp reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def layer_flatten(stacked_params, layer_trees: list) -> list[jnp.ndarray]:
+    """Per-layer (N, P_l) matrices from a client-stacked params pytree.
+
+    ``layer_trees`` is a list of sub-pytrees (one per CEFL layer); each
+    leaf has leading client dim N.
+    """
+    out = []
+    for sub in layer_trees:
+        leaves = [x.reshape(x.shape[0], -1) for x in jax.tree.leaves(sub)]
+        out.append(jnp.concatenate(leaves, axis=1))
+    return out
+
+
+def pairwise_layer_distance(w: jnp.ndarray) -> jnp.ndarray:
+    """(N, P) -> (N, N) Euclidean distances via the Gram trick."""
+    w = w.astype(jnp.float32)
+    sq = jnp.sum(w * w, axis=1)
+    g = w @ w.T
+    d2 = sq[:, None] + sq[None, :] - 2.0 * g
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.sqrt(d2)
+
+
+def distance_matrix(layer_mats: list[jnp.ndarray], use_kernel: bool = False
+                    ) -> jnp.ndarray:
+    """Eq. 3: sum of per-layer Euclidean distances."""
+    if use_kernel:
+        from repro.kernels.ops import pairwise_dist
+        mats = [pairwise_dist(w) for w in layer_mats]
+    else:
+        mats = [pairwise_layer_distance(w) for w in layer_mats]
+    return jnp.sum(jnp.stack(mats), axis=0)
+
+
+def similarity_from_distance(d: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 4: S_ij = −d_ij + d_min + d_max over off-diagonal entries."""
+    n = d.shape[0]
+    off = ~jnp.eye(n, dtype=bool)
+    d_min = jnp.min(jnp.where(off, d, jnp.inf))
+    d_max = jnp.max(jnp.where(off, d, -jnp.inf))
+    s = -d + d_min + d_max
+    return jnp.where(off, s, 0.0)
+
+
+def similarity_graph(layer_mats: list[jnp.ndarray],
+                     use_kernel: bool = False) -> jnp.ndarray:
+    return similarity_from_distance(distance_matrix(layer_mats, use_kernel))
+
+
+def select_leader(similarity: np.ndarray, members: list[int]) -> int:
+    """Eq. 5: the member with max intra-cluster similarity sum."""
+    if len(members) == 1:
+        return members[0]
+    sub = np.asarray(similarity)[np.ix_(members, members)]
+    return members[int(np.argmax(sub.sum(axis=1)))]

@@ -1,0 +1,3 @@
+from repro.data.mobiact import (ACTIVITY_CLASSES, SyntheticMobiAct,
+                                make_client_datasets, windows_to_bitmaps)
+from repro.data.lm import synthetic_lm_batch, synthetic_lm_stream

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: single-query (decode) attention over a KV cache.
+
+The decode hot-spot is bandwidth: one new query attends to a W-entry
+rolling-buffer cache, so the kernel's job is to stream K/V through VMEM
+once, carrying the online-softmax running max / normalizer / accumulator
+in scratch — per-(batch·head) grid cells over key blocks.
+
+Rolling-buffer semantics are passed in as a precomputed (W,) validity
+mask (the ops wrapper derives it from ``pos``): slots not yet written
+this wrap are masked, matching ``layers.decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_blocks: int, scale: float):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (d,)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, d)
+    mask = mask_ref[...] > 0.5                         # (bk,)
+
+    s = jnp.sum(k * q[None, :], axis=1)                # (bk,)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)       # (bk,)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.sum(p[:, None] * v, axis=0)
+    m_ref[0] = m_new
+
+    @pl.when(kb == n_blocks - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid: jax.Array, *, bk: int = DEFAULT_BK,
+                            interpret: bool = True) -> jax.Array:
+    """q: (BH, 1, d); k/v: (BH, W, d); valid: (W,) f32 -> (BH, 1, d)."""
+    bh, w, d = k.shape
+    assert w % bk == 0, (w, bk)
+    grid = (bh, w // bk)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_blocks=w // bk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((bk,), lambda h, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: flash attention forward (causal / bidirectional /
+sliding-window), the backbone's compute hot-spot.
+
+Online-softmax over key blocks: for each (batch·head, q-block) the
+kernel iterates key blocks in the innermost (sequential) grid dim,
+carrying the running max m, normalizer l, and un-normalized output
+accumulator in VMEM scratch; the final key block writes acc / l.
+
+Blocks default to (128, 128) — MXU-aligned — and the q/k tiles plus the
+(bq, bk) score tile bound the VMEM working set independent of sequence
+length; this is the TPU-native replacement for the quadratic S×S score
+materialization (and for the CUDA shared-memory variant the GPU papers
+tile for SMs).
+
+GQA layout: inputs are (B·H, S, d); grouped heads are expanded by the
+ops wrapper via an index map (no materialized repeat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kblocks: int, bq: int, bk: int, causal: bool,
+            window: int | None, scale: float, sk_valid: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < sk_valid           # exclude zero-padded key rows
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+        if not causal:
+            mask &= (kj - qi) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: keep everything at zero instead of exp(-inf-(-inf))
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kblocks - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           sk_valid: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, d), k/v: (BH, Sk, d) -> (BH, Sq, d).
+
+    Sq % bq == 0 and Sk % bk == 0 (ops wrapper pads); ``sk_valid`` marks
+    the number of real (non-padded) key rows.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    grid = (bh, sq // bq, sk // bk)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_kblocks=sk // bk, bq=bq, bk=bk,
+                          causal=causal, window=window, scale=scale,
+                          sk_valid=sk_valid if sk_valid is not None else sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

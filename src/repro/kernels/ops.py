@@ -1,0 +1,112 @@
+"""Jit'd public wrappers around the Pallas kernels: shape padding,
+GQA head expansion, and dtype plumbing.  ``interpret=True`` (default
+here) runs the kernel body on CPU for validation; on a real TPU deploy
+pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as DA
+from repro.kernels import flash_attention as FA
+from repro.kernels import pairwise_dist as PD
+from repro.kernels import partial_agg as PA
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "interpret"))
+def pairwise_dist(w: jax.Array, *, bn: int = PD.DEFAULT_BN,
+                  bp: int = PD.DEFAULT_BP, interpret: bool = True):
+    """(N, P) -> (N, N) f32 pairwise Euclidean distances (CEFL eq. 3)."""
+    n = w.shape[0]
+    wp = _pad_to(_pad_to(w, bn, 0), bp, 1)
+    d = PD.pairwise_dist_pallas(wp, bn=bn, bp=bp, interpret=interpret)
+    return d[:n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("self_idx", "bp", "interpret"))
+def partial_agg(w: jax.Array, a: jax.Array, gamma_per_chunk: jax.Array,
+                self_idx: int, *, bp: int = PA.DEFAULT_BP,
+                interpret: bool = True):
+    """(K, P), (K,), (P/bp,) -> (P,) fused masked aggregation (eq. 6-7)."""
+    p = w.shape[1]
+    wp = _pad_to(w, bp, 1)
+    npad_chunks = wp.shape[1] // bp - gamma_per_chunk.shape[0]
+    g = jnp.concatenate([gamma_per_chunk.astype(jnp.float32),
+                         jnp.zeros((npad_chunks,), jnp.float32)])
+    out = PA.partial_agg_pallas(wp, a, g, self_idx, bp=bp,
+                                interpret=interpret)
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = FA.DEFAULT_BQ, bk: int = FA.DEFAULT_BK,
+                    interpret: bool = True):
+    """GQA flash attention.  q: (B, Sq, H, d); k/v: (B, Sk, KV, d).
+
+    Returns (B, Sq, H, d).  Handles padding to block multiples and the
+    H/KV grouped expansion (keys are gathered per group, not repeated in
+    HBM — the wrapper reshapes views only).
+    """
+    b, sq, h, dd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # (B, S, H, d) -> (B*H, S, d) with kv shared across each group of g
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dd)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, dd)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, dd)
+    sqp = qh.shape[1]
+    qp = _pad_to(qh, bq, 1)
+    kp = _pad_to(kh, bk, 1)
+    vp = _pad_to(vh, bk, 1)
+    out = FA.flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                    bq=bq, bk=bk, sk_valid=kh.shape[1],
+                                    interpret=interpret)
+    out = out[:, :sq]
+    return out.reshape(b, h, sq, dd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, bk: int = DA.DEFAULT_BK,
+                     interpret: bool = True):
+    """Single-token GQA decode attention over a rolling-buffer cache.
+
+    q: (B, 1, H, d); k/v: (B, W, KV, d); pos: () int32 context length.
+    Returns (B, 1, H, d).  Validity follows layers.decode_attention:
+    slot = pos % W is the just-written entry; earlier slots this wrap or
+    a fully wrapped buffer are valid.
+    """
+    b, _, h, d = q.shape
+    w, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    slot = jnp.mod(pos, w)
+    idx = jnp.arange(w)
+    valid = ((idx <= slot) | (pos >= w)).astype(jnp.float32)
+
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, w, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, w, d)
+    pad = (-w) % bk
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    out = DA.decode_attention_pallas(qh, kh, vh, valid, bk=bk,
+                                     interpret=interpret)
+    return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)

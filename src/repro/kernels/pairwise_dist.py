@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: pairwise Euclidean distance matrix (CEFL Step 1).
+
+Computes D[i,j] = ‖w_i − w_j‖₂ for N client weight vectors of width P
+via the Gram trick  d²(i,j) = Σ_chunk (‖x_i‖² + ‖x_j‖² − 2·x_i·x_j),
+so the dominant work is an MXU matmul per (i-tile, j-tile, P-chunk).
+
+Tiling: grid (N/bn, N/bn, P/bp); the P-chunk axis is the innermost
+(sequential) grid dim and accumulates into an f32 VMEM scratch tile;
+the final chunk writes sqrt(max(acc, 0)).  Block sizes are multiples of
+the 128-lane MXU width.  Inputs are padded by ``ops.pairwise_dist`` so
+callers never see the tile granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BN = 128     # client-tile (MXU-aligned)
+DEFAULT_BP = 512     # weight-chunk
+
+
+def _kernel(x_ref, y_ref, o_ref, acc_ref, *, n_chunks: int):
+    pk = pl.program_id(2)
+    # program_id must be read in the main body, not inside a pl.when
+    # closure (the interpret-mode lowering can't substitute it there)
+    pi = pl.program_id(0)
+    pj = pl.program_id(1)
+
+    @pl.when(pk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bn, bp)
+    y = y_ref[...].astype(jnp.float32)          # (bn, bp)
+    g = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    sx = jnp.sum(x * x, axis=1, keepdims=True)          # (bn, 1)
+    sy = jnp.sum(y * y, axis=1, keepdims=True).T        # (1, bn)
+    acc_ref[...] += sx + sy - 2.0 * g
+
+    @pl.when(pk == n_chunks - 1)
+    def _done():
+        d = jnp.sqrt(jnp.maximum(acc_ref[...], 0.0))
+        # exact-zero self-distance: the Gram trick's fp32 cancellation
+        # noise otherwise leaves ~1e-3 junk on the diagonal
+        eye = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 0)
+               == jax.lax.broadcasted_iota(jnp.int32, d.shape, 1))
+        o_ref[...] = jnp.where((pi == pj) & eye, 0.0, d)
+
+
+def pairwise_dist_pallas(w: jax.Array, *, bn: int = DEFAULT_BN,
+                         bp: int = DEFAULT_BP,
+                         interpret: bool = True) -> jax.Array:
+    """w: (N, P) padded to multiples of (bn, bp) -> (N, N) f32 distances.
+
+    Zero-padding P is safe (adds 0 to every squared distance); padding N
+    adds rows whose distances are sliced off by the wrapper.
+    """
+    n, p = w.shape
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    n_chunks = p // bp
+    grid = (n // bn, n // bn, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bp), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
+        interpret=interpret,
+    )(w, w)

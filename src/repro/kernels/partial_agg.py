@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused partial-layer FL aggregation (CEFL Step 4).
+
+Computes   out = γ · (Σ_k a_k · W[k]) + (1 − γ) · W[self]      (eq. 6–7)
+
+over a client-stacked flat weight matrix W (K, P), with per-chunk base
+mask γ ∈ {0,1} (1 → aggregate, 0 → keep own weights).  One HBM pass:
+the stack tile is read once, the weighted reduction over K runs on the
+VPU, and the masked select is fused — replacing the mask-multiply-
+broadcast-add chain the jnp reference builds (3× the HBM traffic).
+
+Grid: (P / bp,); block (K, bp).  K (≤ a few hundred clients) stays
+resident; bp is lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 1024
+
+
+def _kernel(w_ref, a_ref, g_ref, o_ref, *, self_idx: int):
+    w = w_ref[...].astype(jnp.float32)          # (K, bp)
+    a = a_ref[...].astype(jnp.float32)          # (K,)
+    gamma = g_ref[0]                            # () mask for this chunk
+    agg = jnp.sum(w * a[:, None], axis=0)       # (bp,)
+    own = w[self_idx]
+    o_ref[...] = gamma * agg + (1.0 - gamma) * own
+
+
+def partial_agg_pallas(w: jax.Array, a: jax.Array, gamma: jax.Array,
+                       self_idx: int, *, bp: int = DEFAULT_BP,
+                       interpret: bool = True) -> jax.Array:
+    """w: (K, P) stack, a: (K,) weights, gamma: (P/bp,) per-chunk mask.
+
+    Returns (P,) f32 — client ``self_idx``'s post-round weights.
+    """
+    k, p = w.shape
+    assert p % bp == 0, (p, bp)
+    grid = (p // bp,)
+    return pl.pallas_call(
+        functools.partial(_kernel, self_idx=self_idx),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=interpret,
+    )(w, a, gamma)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pairwise_dist_ref(w: jax.Array) -> jax.Array:
+    """(N, P) -> (N, N) Euclidean distances."""
+    w = w.astype(jnp.float32)
+    sq = jnp.sum(w * w, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (w @ w.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def partial_agg_ref(w: jax.Array, a: jax.Array, gamma: jax.Array,
+                    self_idx: int, bp: int) -> jax.Array:
+    """(K, P) stack -> (P,) masked aggregate (eq. 6-7)."""
+    w = w.astype(jnp.float32)
+    agg = jnp.sum(w * a.astype(jnp.float32)[:, None], axis=0)
+    g = jnp.repeat(gamma.astype(jnp.float32), bp)
+    return g * agg + (1.0 - g) * w[self_idx]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """(BH, Sq, d) x (BH, Sk, d) -> (BH, Sq, d), exact softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    sq, sk = q.shape[1], k.shape[1]
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+        if not causal:
+            mask &= (kj - qi) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Oracle for the decode kernel: masked softmax over the cache.
+    q: (B,1,H,d); k/v: (B,W,KV,d); pos: () -> (B,1,H,d)."""
+    b, _, h, d = q.shape
+    w, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bwhd->bhqw", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (d ** 0.5)
+    slot = jnp.mod(pos, w)
+    idx = jnp.arange(w)
+    valid = (idx <= slot) | (pos >= w)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqw,bwhd->bqhd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

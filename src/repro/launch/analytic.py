@@ -1,0 +1,320 @@
+"""Analytic roofline cost model, exact for this repo's architectures.
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``while``/scan body
+ONCE (verified in tests/test_roofline.py), and every big config here
+scans over layers and microbatches — so HLO-reported FLOPs understate
+the true per-step cost by the scan trip counts.  We therefore compute
+the three roofline terms from closed-form per-layer counts (we own the
+model code; the formulas are exact for these einsums), and use the
+compiled HLO for (a) ``memory_analysis`` (exact), (b) the collective
+*schedule* (which ops, what shapes — with known trip-count multipliers),
+(c) cross-validation on small unscanned variants where cost_analysis IS
+exact (tests/test_roofline.py::test_analytic_matches_hlo).
+
+All byte counts assume the config's compute dtype for activations and
+param dtype for weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.launch.roofline import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@dataclasses.dataclass
+class MeshShape:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def n(self):
+        return self.pod * self.data * self.model
+
+
+def mesh_shape(mesh) -> MeshShape:
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshShape(d.get("pod", 1), d.get("data", 1), d.get("model", 1))
+
+
+def _dtype_bytes(dt) -> int:
+    return np.dtype(dt).itemsize
+
+
+# ------------------------------------------------------------ param count
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """total and active (per-token) parameter counts."""
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * hd * (H + 2 * KV) + H * hd * d
+    if cfg.qkv_bias:
+        attn += hd * (H + 2 * KV)
+    gate_mult = 3 if cfg.mlp_act == "silu_gated" else 2
+    if cfg.arch_type == "moe":
+        expert = 3 * d * f                       # gated experts
+        mlp_total = cfg.n_experts * expert + d * cfg.n_experts
+        mlp_active = cfg.experts_per_token * expert + d * cfg.n_experts
+        block_total = attn + mlp_total
+        block_active = attn + mlp_active
+        total = L * block_total + 2 * V * d
+        active = L * block_active + 2 * V * d
+    elif cfg.arch_type == "ssm":                 # xlstm
+        d_in = 2 * d
+        P = d_in // cfg.n_heads
+        N = P // 2
+        mlstm = d * 2 * d_in + d_in * cfg.n_heads * (2 * N + P) \
+            + d_in * 2 * cfg.n_heads + d_in * d
+        slstm = d * 4 * d + cfg.n_heads * (d // cfg.n_heads) * 4 * (d // cfg.n_heads) + d * d
+        n_s = len(cfg.slstm_at)
+        total = (L - n_s) * mlstm + n_s * slstm + 2 * V * d
+        active = total
+    elif cfg.arch_type == "hybrid":
+        d_in = cfg.ssm_expand * d
+        N = cfg.ssm_state
+        Hs = d_in // cfg.ssm_head_dim
+        mamba = d * (2 * d_in + 2 * N + Hs) + d_in * d + 3 * Hs
+        shared = attn + gate_mult * d * f
+        total = L * mamba + shared + 2 * V * d
+        active = total
+    else:
+        mlp = gate_mult * d * f
+        total = L * (attn + mlp) + 2 * V * d
+        if cfg.arch_type == "audio":
+            total += cfg.frontend_dim * d - V * d    # no input embed; proj
+        if cfg.arch_type == "vlm":
+            total += cfg.frontend_dim * d
+        active = total
+    return {"total": int(total), "active": int(active)}
+
+
+# -------------------------------------------------------------- FLOPs
+
+
+def step_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global FLOPs for one step of the shape's kind (all devices)."""
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    pc = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * pc["active"] * tokens
+        attn_fl = _attn_flops(cfg, B, S) * 3.0        # fwd + 2x bwd
+        if cfg.remat:
+            base *= 4.0 / 3.0                          # one extra fwd
+            attn_fl *= 4.0 / 3.0
+        return base + attn_fl
+    if shape.kind == "prefill":
+        tokens = B * S
+        return 2.0 * pc["active"] * tokens + _attn_flops(cfg, B, S)
+    # decode: one token, attention reads the cache
+    ctx = min(S, cfg.sliding_window or S)
+    return 2.0 * pc["active"] * B + _decode_attn_flops(cfg, B, ctx)
+
+
+def _attn_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    """Quadratic attention term (score + value contractions), forward."""
+    if cfg.arch_type == "ssm":
+        # chunked linear attention: per chunk Q² instead of S²
+        Q = cfg.ssm_chunk or 256
+        d_in = 2 * cfg.d_model
+        return 2.0 * B * S * Q * (d_in // 2 + d_in) * cfg.n_layers
+    if cfg.arch_type == "hybrid":
+        Q = cfg.ssm_chunk
+        d_in = cfg.ssm_expand * cfg.d_model
+        ssm = 2.0 * B * S * Q * (cfg.ssm_state + d_in) * cfg.n_layers
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        win = min(S, cfg.sliding_window or S)
+        attn = 4.0 * B * S * win * cfg.n_heads * cfg.hd * n_attn
+        return ssm + attn
+    win = min(S, cfg.sliding_window or S)
+    return 4.0 * B * S * win * cfg.n_heads * cfg.hd * cfg.n_layers
+
+
+def _decode_attn_flops(cfg: ModelConfig, B: int, ctx: int) -> float:
+    if cfg.arch_type == "ssm":
+        d_in = 2 * cfg.d_model
+        return 2.0 * B * d_in * (d_in // 2) * cfg.n_layers
+    if cfg.arch_type == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        ssm = 4.0 * B * d_in * cfg.ssm_state * cfg.n_layers
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        return ssm + 4.0 * B * ctx * cfg.n_heads * cfg.hd * n_attn
+    return 4.0 * B * ctx * cfg.n_heads * cfg.hd * cfg.n_layers
+
+
+# --------------------------------------------------------------- HBM bytes
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape_name: str) -> float:
+    """Global HBM traffic for one step (all devices, both directions)."""
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    pc = param_counts(cfg)
+    pbytes = pc["total"] * _dtype_bytes(cfg.param_dtype)
+    abytes = _dtype_bytes(cfg.compute_dtype)
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        # params: read every microbatch (fwd+bwd) + optimizer read/write
+        w_traffic = pbytes * (2 * cfg.microbatch + 3)
+        act = B * S * d * abytes * cfg.n_layers * (2 if cfg.remat else 6)
+        return w_traffic + act
+    if shape.kind == "prefill":
+        act = B * S * d * abytes * cfg.n_layers * 4
+        return pbytes + act
+    # decode: all params + the whole KV cache/state once
+    return pbytes + cache_bytes(cfg, shape_name) + B * d * abytes * cfg.n_layers * 4
+
+
+def cache_bytes(cfg: ModelConfig, shape_name: str) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    abytes = _dtype_bytes(cfg.cache_dtype or cfg.compute_dtype)
+    W = min(S, cfg.sliding_window or S)
+    if cfg.arch_type == "ssm":
+        d_in = 2 * cfg.d_model
+        P = d_in // cfg.n_heads
+        return cfg.n_layers * B * cfg.n_heads * (P // 2) * (P + 1) * 4.0
+    if cfg.arch_type == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        Hs = d_in // cfg.ssm_head_dim
+        ssm = cfg.n_layers * B * Hs * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        return ssm + n_attn * 2 * B * W * cfg.n_kv_heads * cfg.hd * abytes
+    return cfg.n_layers * 2.0 * B * W * cfg.n_kv_heads * cfg.hd * abytes
+
+
+# --------------------------------------------------------- collective bytes
+
+
+def step_collective_bytes(cfg: ModelConfig, shape_name: str, ms: MeshShape,
+                          *, mode: str = "ddp",
+                          inner_steps: int = 1) -> dict:
+    """Per-device link bytes per step, split ICI vs DCN (ring factors).
+
+    mode: 'ddp'  — gradients all-reduced over data (and pod) every step;
+          'cefl' — gradients all-reduced over data only; base-mask params
+                   all-reduced over pod once per ``inner_steps`` steps
+                   (the paper's partial aggregation, eq. 6-7).
+    """
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    pc = param_counts(cfg)
+    abytes = _dtype_bytes(cfg.compute_dtype)
+    d = cfg.d_model
+    tp = ms.model
+
+    ici = 0.0
+    dcn = 0.0
+
+    def ring(sz, g):
+        return 2.0 * sz * (g - 1) / g if g > 1 else 0.0
+
+    # --- tensor-parallel activation all-reduces (per layer, fwd)
+    if tp > 1:
+        step_tokens = B * S if shape.kind != "decode" else B
+        per_dev_tokens = step_tokens / max(ms.data * ms.pod, 1)
+        act = per_dev_tokens * d * abytes
+        n_ar = 2 * cfg.n_layers            # attn-out + mlp-out per layer
+        if cfg.arch_type == "moe":
+            # all-to-all dispatch+return when experts are sharded;
+            # fp8 dispatch (§Perf lever) halves these bytes
+            if cfg.n_experts % tp == 0:
+                db = _dtype_bytes(cfg.moe_dispatch_dtype or cfg.compute_dtype)
+                a2a = 2 * per_dev_tokens * cfg.experts_per_token * d * db
+                a2a_mult = 3.0 if shape.kind == "train" else 1.0
+                ici += a2a * (tp - 1) / tp * cfg.n_layers * a2a_mult
+            n_ar = cfg.n_layers            # attn-out only
+        mult = 3.0 if shape.kind == "train" else 1.0
+        ici += ring(act, tp) / 2.0 * n_ar * mult   # one-shot AR ≈ S(g-1)/g
+
+    # --- ZeRO/FSDP parameter all-gathers (fwd+bwd, once per microbatch)
+    if cfg.zero1 and shape.kind == "train" and ms.data > 1:
+        pbytes_shard = pc["total"] * _dtype_bytes(cfg.param_dtype) / tp
+        ici += (2 * cfg.microbatch * pbytes_shard
+                * (ms.data - 1) / ms.data)
+
+    # --- data/pod-parallel gradient sync
+    if shape.kind == "train":
+        gbytes = pc["total"] * 4.0 / tp            # grads sharded over model
+        if mode == "ddp":
+            g_ici = ring(gbytes, ms.data)
+            ici += g_ici
+            if ms.pod > 1:
+                dcn += ring(gbytes, ms.pod)
+        else:  # cefl
+            ici += ring(gbytes, ms.data)
+            if ms.pod > 1:
+                base_frac = _base_fraction(cfg)
+                dcn += ring(gbytes * base_frac, ms.pod) / inner_steps
+
+    # --- decode with sequence-sharded cache: softmax combine over data
+    if shape.kind == "decode" and B == 1 and ms.data > 1:
+        part = cfg.n_heads * cfg.hd * 4.0          # per-layer partial out
+        ici += ring(part, ms.data) * cfg.n_layers
+
+    # --- vocab-sharded logits all-gather (last token only for serve)
+    if tp > 1 and cfg.vocab % tp == 0 and shape.kind != "train":
+        ici += B * cfg.vocab * 4.0 * (tp - 1) / tp
+
+    return {"ici": ici, "dcn": dcn}
+
+
+def _base_fraction(cfg: ModelConfig) -> float:
+    if cfg.base_predicate == "non_expert" and cfg.arch_type == "moe":
+        pc = param_counts(cfg)
+        expert_bytes = cfg.n_layers * 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+        return max(0.0, 1.0 - expert_bytes / pc["total"])
+    B = cfg.base_layers or cfg.n_layers // 2
+    return B / cfg.n_layers
+
+
+# ------------------------------------------------------------------ report
+
+
+@dataclasses.dataclass
+class AnalyticRoofline:
+    flops_per_dev: float
+    hbm_per_dev: float
+    ici_per_dev: float
+    dcn_per_dev: float
+    model_flops: float
+    hlo_useful_ratio: float | None = None
+
+    @property
+    def compute_s(self):
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.hbm_per_dev / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.ici_per_dev / ICI_BW + self.dcn_per_dev / DCN_BW
+
+    @property
+    def dominant(self):
+        t = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+
+def analytic_roofline(cfg: ModelConfig, shape_name: str, mesh,
+                      *, mode: str = "ddp",
+                      inner_steps: int = 1) -> AnalyticRoofline:
+    ms = mesh_shape(mesh)
+    fl = step_flops(cfg, shape_name) / ms.n
+    hbm = step_hbm_bytes(cfg, shape_name) / ms.n
+    coll = step_collective_bytes(cfg, shape_name, ms, mode=mode,
+                                 inner_steps=inner_steps)
+    pc = param_counts(cfg)
+    from repro.launch.roofline import model_flops
+    mf = model_flops(cfg, INPUT_SHAPES[shape_name], pc["active"])
+    return AnalyticRoofline(fl, hbm, coll["ici"], coll["dcn"], mf)

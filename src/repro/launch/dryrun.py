@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) combination against the production
+mesh built from 512 placeholder host devices — NO allocation; inputs are
+ShapeDtypeStructs.  Proves the sharding config is coherent, prints
+memory_analysis (fits/doesn't-fit evidence) and cost_analysis, and emits
+the roofline record (HLO collective schedule + analytic terms) consumed
+by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--cefl]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCHS, applicable_shapes, decode_window,
+                                    get_config, shape_config)
+from repro.core.sharded import CEFLShardedConfig, make_fl_round
+from repro.launch import analytic as A
+from repro.launch import roofline as R
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.train.steps import make_decode_fn, make_prefill_fn, make_train_step
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    }
+
+
+def _scan_trip_counts(cfg, shape_kind: str, mode: str) -> dict:
+    """Known multipliers for collectives that live inside scan bodies
+    (cost_analysis counts while bodies once; see launch/analytic.py)."""
+    mult = {}
+    if shape_kind == "train":
+        layers = cfg.n_layers if cfg.scan_layers else 1
+        mult["in_layer_scan"] = layers * max(cfg.microbatch, 1)
+    return mult
+
+
+_DTYPES = {"fp8": "float8_e4m3fn", "int8": "int8", "bf16": "bfloat16",
+           "f32": "float32"}
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v in _DTYPES:
+            out[k] = getattr(jnp, _DTYPES[v])
+        elif v in ("true", "false"):
+            out[k] = v == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mode: str = "baseline", verbose: bool = True,
+               overrides: dict | None = None) -> dict:
+    """Lower + compile one combination.  mode: baseline | cefl | zero1.
+    ``overrides`` applies ModelConfig fields (the §Perf lever knobs)."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = shape_config(get_config(arch), shape_name)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    if shape.kind == "train":
+        # per-microbatch batch must stay divisible by the data shards
+        # (pod×data for the multi-pod DDP mesh; data within a pod for cefl)
+        if mode == "cefl":          # per-pod batch, sharded over data=16
+            eff_b, shards = shape.global_batch // 2, 16
+        elif multi_pod:             # DDP over pod×data
+            eff_b, shards = shape.global_batch, 2 * 16
+        else:
+            eff_b, shards = shape.global_batch, 16
+        m = cfg.microbatch
+        while m > 1 and (eff_b // m) % shards:
+            m //= 2
+        if m != cfg.microbatch:
+            cfg = cfg.with_(microbatch=m)
+            rec_note = f"microbatch clamped {m} for {shards} data shards"
+        else:
+            rec_note = None
+    else:
+        rec_note = None
+    rec = {"arch": arch, "shape": shape_name, "mode": mode,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "multi_pod": multi_pod,
+           "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    if rec_note:
+        rec["note"] = rec_note
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train" and mode == "cefl":
+            assert multi_pod, "CEFL pod protocol needs the pod axis"
+            lowered = _lower_cefl_round(cfg, mesh, shape_name)
+        elif shape.kind == "train":
+            lowered = _lower_train(cfg, mesh, shape_name,
+                                   zero1=(mode == "zero1" or cfg.zero1))
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(cfg, mesh, shape_name)
+        else:
+            lowered = _lower_decode(cfg, mesh, shape_name)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = _mem_dict(mem)
+    ca = compiled.cost_analysis() or {}
+    rec["hlo_flops_per_dev_body"] = float(ca.get("flops", 0.0))
+    rec["hlo_bytes_per_dev_body"] = float(ca.get("bytes accessed", 0.0))
+
+    hlo = R.analyze(compiled, mesh)
+    rec["collective_schedule"] = _schedule_summary(hlo.collectives)
+    rec["hlo_ici_bytes_once"] = hlo.ici_bytes
+    rec["hlo_dcn_bytes_once"] = hlo.dcn_bytes
+
+    ar = A.analytic_roofline(cfg, shape_name, mesh,
+                             mode=("cefl" if mode == "cefl" else "ddp"),
+                             inner_steps=8)
+    rec["roofline"] = {
+        "compute_s": ar.compute_s, "memory_s": ar.memory_s,
+        "collective_s": ar.collective_s, "dominant": ar.dominant,
+        "flops_per_dev": ar.flops_per_dev, "hbm_per_dev": ar.hbm_per_dev,
+        "ici_per_dev": ar.ici_per_dev, "dcn_per_dev": ar.dcn_per_dev,
+        "model_flops": ar.model_flops,
+        "useful_ratio": (ar.model_flops
+                         / (ar.flops_per_dev * math.prod(mesh.devices.shape))
+                         if ar.flops_per_dev else None),
+    }
+    pc = A.param_counts(cfg)
+    rec["params_total"] = pc["total"]
+    rec["params_active"] = pc["active"]
+    rec["elapsed_s"] = time.time() - t0
+    if verbose:
+        dom = rec["roofline"]["dominant"]
+        print(f"[dryrun] {arch:24s} {shape_name:12s} mesh={rec['mesh']:9s} "
+              f"mode={mode:8s} OK {rec['elapsed_s']:6.1f}s "
+              f"dom={dom} mem(temp)={mem.temp_size_in_bytes/1e9:.2f}GB")
+    return rec
+
+
+def _schedule_summary(ops) -> list:
+    agg: dict = {}
+    for op in ops:
+        key = (op.kind, op.group_size, op.crosses_pod)
+        a = agg.setdefault(key, {"count": 0, "bytes": 0.0, "link_bytes": 0.0})
+        a["count"] += 1
+        a["bytes"] += op.bytes_total
+        a["link_bytes"] += op.link_bytes
+    return [{"kind": k[0], "group": k[1], "dcn": k[2], **v}
+            for k, v in sorted(agg.items())]
+
+
+# ------------------------------------------------------------- lowerings
+
+
+def _lower_train(cfg, mesh, shape_name, *, zero1=False):
+    step = make_train_step(cfg)
+    state_abs = SP.abstract_train_state(cfg)
+    state_ps = SP.train_state_pspecs(cfg, mesh, zero1=zero1)
+    batch_abs = SP.batch_struct(cfg, shape_name)
+    batch_ps = SP.batch_pspecs(cfg, shape_name, mesh)
+    metrics_ps = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return jax.jit(step, in_shardings=(state_ps, batch_ps),
+                   out_shardings=(state_ps, metrics_ps),
+                   donate_argnums=(0,)).lower(state_abs, batch_abs)
+
+
+def _lower_cefl_round(cfg, mesh, shape_name, n_pods: int = 2,
+                      inner_steps: int = 2):
+    """The paper's protocol at pod scale: ε local steps + base-only
+    cross-pod partial aggregation (core/sharded.py)."""
+    fl = CEFLShardedConfig(n_pods=n_pods, inner_steps=inner_steps,
+                           mode="cefl")
+    round_fn = make_fl_round(cfg, fl)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    from repro.core.sharded import init_pod_state
+    state_abs = jax.eval_shape(
+        lambda k: init_pod_state(cfg, k, n_pods), key)
+    state_ps = SP.train_state_pspecs(cfg, mesh, pod_stacked=True)
+
+    shape = INPUT_SHAPES[shape_name]
+    per_pod = shape.global_batch // n_pods
+    micro = cfg.microbatch
+    one = SP.batch_struct(cfg, shape_name, micro=False)
+
+    def expand(s):
+        return jax.ShapeDtypeStruct(
+            (inner_steps, n_pods, micro, per_pod // micro) + s.shape[1:],
+            s.dtype)
+
+    batch_abs = jax.tree.map(expand, one)
+    bp = SP.batch_pspecs(cfg, shape_name, mesh, micro=False)
+
+    def expand_ps(ps):
+        return P(None, "pod", None, "data", *list(ps)[1:])
+
+    batch_ps = jax.tree.map(expand_ps, bp,
+                            is_leaf=lambda x: isinstance(x, P))
+    metrics_ps = {"loss": P()}
+    return jax.jit(round_fn, in_shardings=(state_ps, batch_ps),
+                   out_shardings=(state_ps, metrics_ps),
+                   donate_argnums=(0,)).lower(state_abs, batch_abs)
+
+
+def _lower_prefill(cfg, mesh, shape_name):
+    window = decode_window(cfg, shape_name) if cfg.arch_type != "audio" \
+        else INPUT_SHAPES[shape_name].seq_len
+    if cfg.arch_type == "audio":
+        # encoder-only: "prefill" = full encode, no cache
+        from repro.models import transformer as T
+
+        def encode(params, batch):
+            logits, _ = T.forward(cfg, params, batch)
+            return logits
+
+        params_abs = SP.abstract_train_state(cfg).params
+        params_ps = SP.train_state_pspecs(cfg, mesh).params
+        batch_abs = SP.batch_struct(cfg, shape_name)
+        batch_ps = SP.batch_pspecs(cfg, shape_name, mesh)
+        out_ps = SP.logits_pspec(cfg, mesh)
+        return jax.jit(encode, in_shardings=(params_ps, batch_ps),
+                       out_shardings=out_ps).lower(params_abs, batch_abs)
+
+    fn = make_prefill_fn(cfg, window)
+    params_abs = SP.abstract_train_state(cfg).params
+    params_ps = SP.serve_param_pspecs(cfg, mesh)
+    batch_abs = SP.batch_struct(cfg, shape_name)
+    batch_ps = SP.batch_pspecs(cfg, shape_name, mesh)
+    # cache layout must match decode-time expectations → same pspec fn,
+    # but prefill caches are batch-sharded (the prompt batch is real)
+    cache_ps = SP.cache_pspecs(cfg, shape_name, mesh)
+    out_ps = (SP.logits_pspec(cfg, mesh), cache_ps)
+    return jax.jit(fn, in_shardings=(params_ps, batch_ps),
+                   out_shardings=out_ps).lower(params_abs, batch_abs)
+
+
+def _lower_decode(cfg, mesh, shape_name):
+    fn = make_decode_fn(cfg)
+    params_abs = SP.abstract_train_state(cfg).params
+    params_ps = SP.serve_param_pspecs(cfg, mesh)
+    cache_abs = SP.abstract_cache(cfg, shape_name)
+    cache_ps = SP.cache_pspecs(cfg, shape_name, mesh)
+    toks, pos = SP.decode_inputs(cfg, shape_name)
+    tok_ps, pos_ps = SP.decode_input_pspecs(cfg, shape_name, mesh)
+    shape = INPUT_SHAPES[shape_name]
+    batch_sharded = shape.global_batch > 1
+    out_ps = (tok_ps, SP.logits_pspec(cfg, mesh, batch_sharded), cache_ps)
+    return jax.jit(fn, in_shardings=(params_ps, cache_ps, tok_ps, pos_ps),
+                   out_shardings=out_ps,
+                   donate_argnums=(1,)).lower(params_abs, cache_abs,
+                                              toks, pos)
+
+
+# ------------------------------------------------------------------- main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cefl", action="store_true",
+                    help="lower the CEFL pod round for train shapes")
+    ap.add_argument("--mode", default=None, help="baseline|cefl|zero1")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    help="ModelConfig override key=value (perf levers), "
+                         "e.g. --set attn_q_chunk=512 --set cache_dtype=fp8")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.overrides)
+
+    combos = []
+    archs = [a for a in ARCHS if a != "fd_cnn"] if (args.all or not args.arch) \
+        else [args.arch.replace("_", "-")]
+    for a in archs:
+        cfg = get_config(a)
+        shapes = applicable_shapes(cfg)
+        if args.shape:
+            shapes = [s for s in shapes if s == args.shape]
+        for s in shapes:
+            meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+            for mp in meshes:
+                mode = args.mode or ("cefl" if (args.cefl and mp and
+                                                INPUT_SHAPES[s].kind == "train")
+                                     else "baseline")
+                combos.append((a, s, mp, mode))
+
+    results, failures = [], []
+    for a, s, mp, mode in combos:
+        try:
+            rec = dryrun_one(a, s, multi_pod=mp, mode=mode,
+                             overrides=overrides)
+            results.append(rec)
+        except Exception as e:  # noqa: BLE001 - record and continue
+            failures.append((a, s, mp, mode, repr(e)))
+            print(f"[dryrun] {a} {s} multi_pod={mp} mode={mode} FAILED: {e}")
+            traceback.print_exc()
+        if args.out:
+            with open(args.out, "a") as f:
+                for rec in results[len(results) - 1:]:
+                    f.write(json.dumps(rec) + "\n")
+
+    print(f"\n[dryrun] {len(results)} OK / {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", f_)
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

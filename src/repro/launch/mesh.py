@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — jax locks the device count on
+first backend init, and only ``dryrun.py`` sets the 512-placeholder-
+device XLA flag.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                   # 256 v5e chips
+MULTI_POD = (2, 16, 16)                 # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()[:need]      # dry-run host has 512 placeholders
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pods: int | None = None):
+    """Small mesh for CPU tests (requires host-device-count flag set)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def required_devices(*, multi_pod: bool = False) -> int:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    n = 1
+    for s in shape:
+        n *= s
+    return n

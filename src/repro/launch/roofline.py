@@ -1,0 +1,215 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (deliverable g):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = Σ per-op link-bytes / ICI_BW   (DCN-crossing ops split out)
+
+``cost_analysis()`` provides per-device FLOPs / bytes for the SPMD
+program.  Collective bytes are NOT in cost_analysis: we parse the
+compiled HLO text, summing operand sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, converted
+to per-device link bytes with ring-algorithm factors:
+
+    all-reduce      2·S·(g−1)/g        all-gather     S_out·(g−1)/g
+    reduce-scatter  S_in·(g−1)/g       all-to-all     S·(g−1)/g
+    collective-permute  S
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI; pod-crossing (DCN) bandwidth assumed 25 GB/s/chip
+(recorded as an assumption — multi-pod numbers are qualitative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_total: int          # logical tensor bytes (result side)
+    group_size: int
+    link_bytes: float         # per-device bytes over links (ring model)
+    crosses_pod: bool
+    line: str
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    hbm_bytes: float          # per device
+    ici_bytes: float          # per device over ICI links
+    dcn_bytes: float          # per device over DCN
+    collectives: list
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+        }
+
+
+def _result_bytes(line: str, op_match=None) -> int:
+    """Sum the byte size of the op's *result* shape: the segment between
+    the '=' and the op name, e.g. ``%ar = f32[4,8]{1,0} all-reduce(...)``
+    (tuples for the -start halves of async pairs are summed)."""
+    eq = line.find("=")
+    end = op_match.start() if op_match is not None else len(line)
+    lhs = line[eq + 1:end] if eq >= 0 else line[:end]
+    sizes = []
+    for m in _SHAPE_RE.finditer(lhs):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    if not sizes:
+        return 0
+    # async -start ops carry (operand, result) tuples: take the largest
+    # single buffer rather than double-counting both halves
+    return max(sizes) if "-start" in line[:end] else sum(sizes)
+
+
+def _group_info(line: str, pod_size: int | None):
+    m = _GROUPS_RE.search(line)
+    crosses = False
+    if m:
+        n, g = int(m.group(1)), int(m.group(2))
+        gsize = g
+        # iota groups [n,g]<=[dims]T(perm): materialize the device-id
+        # grid exactly — a group crosses pods iff its members span
+        # different id//pod_size blocks (a stride alone does NOT imply
+        # pod crossing: within-pod data-axis groups are strided when the
+        # pod axis is outermost).
+        if pod_size:
+            import numpy as np
+            dims = [int(x) for x in m.group(3).split(",")]
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            if m.group(4):
+                perm = [int(x) for x in m.group(4).split(",")]
+                ids = ids.transpose(perm)
+            groups = ids.reshape(n, g)
+            pods = groups // pod_size
+            crosses = bool((pods != pods[:, :1]).any())
+        return gsize, crosses
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        members = [int(x) for x in m.group(1).split(",") if x.strip()]
+        gsize = max(len(members), 1)
+        if pod_size:
+            crosses = (max(members) // pod_size) != (min(members) // pod_size)
+        return gsize, crosses
+    return 1, False
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      pod_size: int | None = None) -> list[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or line.startswith("ROOT %fusion"):
+            continue
+        # skip the -done halves of async pairs (size counted at -start)
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        kind = m.group(1)
+        size = _result_bytes(line, m)
+        if size == 0:
+            continue
+        g, crosses = _group_info(line, pod_size)
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            link = 2 * size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            link = size * (g - 1)          # result is 1/g of the input
+        elif kind in ("all-gather", "all-to-all"):
+            link = size * (g - 1) / g
+        else:                      # collective-permute
+            link = size
+        ops.append(CollectiveOp(kind, size, g, link, crosses, line[:200]))
+    return ops
+
+
+def analyze(compiled, mesh, *, scan_overrides: dict | None = None) -> Roofline:
+    """Build the roofline record from a compiled lowering."""
+    n_dev = math.prod(mesh.devices.shape)
+    pod_size = None
+    if "pod" in mesh.axis_names:
+        pod_size = n_dev // mesh.devices.shape[list(mesh.axis_names).index("pod")]
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    colls = parse_collectives(txt, n_dev, pod_size)
+    # Collectives inside while/scan bodies execute once per iteration but
+    # appear once in the HLO; callers may scale via scan_overrides
+    # {substring: multiplier}.
+    ici = dcn = 0.0
+    for op in colls:
+        mult = 1.0
+        for key, m_ in (scan_overrides or {}).items():
+            if key in op.line:
+                mult = m_
+        if op.crosses_pod:
+            dcn += op.link_bytes * mult
+        else:
+            ici += op.link_bytes * mult
+    return Roofline(flops, hbm, ici, dcn, colls, n_dev)
+
+
+def model_flops(cfg, shape, n_active_params: int) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N·B decode."""
+    if shape.kind == "train":
+        return 6.0 * n_active_params * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active_params * shape.global_batch * shape.seq_len
+    return 2.0 * n_active_params * shape.global_batch

@@ -1,0 +1,236 @@
+"""Abstract (ShapeDtypeStruct) inputs + PartitionSpec trees for the
+dry-run: every (architecture × input-shape × mesh) combination lowers
+through these — no device allocation anywhere.
+
+Shape semantics (assignment spec):
+  train_4k    — train_step on (256, 4096) token batches (microbatched)
+  prefill_32k — prefill of (32, 32768) prompts → last-token logits + cache
+  decode_32k  — serve_step: ONE token, KV cache of 32768, batch 128
+  long_500k   — serve_step: ONE token, 524288 context, batch 1;
+                sub-quadratic archs keep O(1)/windowed state; the KV-cache
+                sequence dim is sharded over the data axis(es)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.configs.registry import decode_window, shape_config
+from repro.launch.sharding import data_axes, param_pspecs, spec_for_leaf
+from repro.models import transformer as T
+from repro.models.base import is_spec
+from repro.optim.optimizers import make_optimizer
+from repro.train.steps import TrainState, init_train_state
+
+
+def _dp(mesh):
+    axes = data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _msize(mesh, name="model"):
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+# ------------------------------------------------------------ batch specs
+
+
+def batch_struct(cfg: ModelConfig, shape_name: str,
+                 micro: bool = True) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract input batch for train/prefill shapes."""
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    lead: tuple[int, ...]
+    if shape.kind == "train" and micro and cfg.microbatch > 1:
+        lead = (cfg.microbatch, B // cfg.microbatch)
+    else:
+        lead = (B,)
+
+    def sds(*dims, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(lead + dims, dtype)
+
+    if cfg.arch_type == "audio":
+        out = {"frames": sds(S, cfg.frontend_dim, dtype=f32)}
+        if shape.kind == "train":
+            out["labels"] = sds(S)
+        return out
+    if cfg.arch_type == "vlm":
+        s_text = S - cfg.n_img_tokens
+        out = {"tokens": sds(s_text),
+               "img_emb": sds(cfg.n_img_tokens, cfg.frontend_dim, dtype=f32)}
+        if shape.kind == "train":
+            out["labels"] = sds(s_text)
+        return out
+    out = {"tokens": sds(S)}
+    if shape.kind == "train":
+        out["labels"] = sds(S)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape_name: str, mesh,
+                 micro: bool = True):
+    shape = INPUT_SHAPES[shape_name]
+    dp = _dp(mesh)
+    lead = (None, dp) if (shape.kind == "train" and micro
+                          and cfg.microbatch > 1) else (dp,)
+
+    def ps(extra_dims: int):
+        return P(*lead, *([None] * extra_dims))
+
+    if cfg.arch_type == "audio":
+        out = {"frames": ps(2)}
+        if shape.kind == "train":
+            out["labels"] = ps(1)
+        return out
+    if cfg.arch_type == "vlm":
+        out = {"tokens": ps(1), "img_emb": ps(2)}
+        if shape.kind == "train":
+            out["labels"] = ps(1)
+        return out
+    out = {"tokens": ps(1)}
+    if shape.kind == "train":
+        out["labels"] = ps(1)
+    return out
+
+
+# ------------------------------------------------------------ state specs
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_train_state(cfg, k), key)
+
+
+def train_state_pspecs(cfg: ModelConfig, mesh, *, zero1: bool = False,
+                       pod_stacked: bool = False):
+    """PartitionSpecs for TrainState: params by logical-axis rules, the
+    optimizer moments inherit the param spec (factored adafactor moments
+    drop the corresponding trailing dim).  ``pod_stacked`` prepends the
+    CEFL per-pod stack dim, sharded over the ``pod`` mesh axis."""
+    specs = T.model_specs(cfg)
+    pspecs = param_pspecs(specs, mesh)
+    if zero1:
+        from repro.launch.sharding import zero_extend
+        axes = tuple(a for a in ("data", "pod")
+                     if a in mesh.axis_names) if not pod_stacked else ("data",)
+        pspecs = zero_extend(pspecs, specs, mesh, axes=axes)
+
+    state_abs = abstract_train_state(cfg)
+    p_leaves, _ = jax.tree.flatten(pspecs)
+
+    def match_tree(moment_tree):
+        """Map a moment pytree (params-structured, possibly with factored
+        dict leaves) to pspecs derived from the param pspecs."""
+        if moment_tree is None:
+            return None
+        fact = lambda x: isinstance(x, dict) and set(x) == {"row", "col"}
+        m_leaves, m_def = jax.tree.flatten(moment_tree, is_leaf=fact)
+        out = []
+        for ps, m in zip(p_leaves, m_leaves):
+            if fact(m):
+                dims = list(ps) + [None] * (len(m["row"].shape) + 1 - len(ps))
+                out.append({"row": P(*dims[:-1]),
+                            "col": P(*(dims[:-2] + dims[-1:]))})
+            else:
+                dims = list(ps) + [None] * (len(m.shape) - len(ps))
+                out.append(P(*dims[:len(m.shape)]))
+        return jax.tree.unflatten(m_def, out)
+
+    mu_ps = match_tree(state_abs.opt_state.mu)
+    nu_ps = match_tree(state_abs.opt_state.nu)
+    from repro.optim.optimizers import OptState
+    st = TrainState(P(), pspecs, OptState(P(), mu_ps, nu_ps))
+    if pod_stacked:
+        def prepend(ps):
+            if not isinstance(ps, P):
+                return ps
+            return P("pod", *ps)
+        st = jax.tree.map(prepend, st,
+                          is_leaf=lambda x: isinstance(x, P))
+        # scalar step counters stay replicated but gain the stack dim
+        st = TrainState(P("pod"), st.params,
+                        OptState(P("pod"), st.opt_state.mu, st.opt_state.nu))
+    return st
+
+
+def serve_param_pspecs(cfg: ModelConfig, mesh):
+    """Weight-stationary serving: params span the full mesh (model axis by
+    logical rules + data/pod axes on the largest remaining dims).  Without
+    this, a 340B/235B checkpoint is only model-axis sharded and exceeds
+    per-chip HBM (probe_nem/probe_moe in EXPERIMENTS.md §Dry-run)."""
+    from repro.launch.sharding import zero_extend
+    specs = T.model_specs(cfg)
+    pspecs = param_pspecs(specs, mesh)
+    axes = tuple(a for a in ("data", "pod") if a in mesh.axis_names)
+    return zero_extend(pspecs, specs, mesh, axes=axes)
+
+
+# ------------------------------------------------------------ cache specs
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    window = decode_window(cfg, shape_name)
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, window))
+
+
+def cache_pspecs(cfg: ModelConfig, shape_name: str, mesh):
+    """Sharding for the serve cache.  batch → data axes (decode_32k);
+    long_500k (batch 1) shards the cache sequence dim instead."""
+    shape = INPUT_SHAPES[shape_name]
+    dp = _dp(mesh)
+    m = _msize(mesh)
+    seq_sharded = shape.global_batch == 1
+    cache_abs = abstract_cache(cfg, shape_name)
+
+    def kv_like(leaf):       # (L, B, W, KV, hd)
+        _, Bd, W, KV, hd = leaf.shape
+        kv_ax = "model" if KV % m == 0 else None
+        hd_ax = "model" if (kv_ax is None and hd % m == 0) else None
+        if seq_sharded:
+            return P(None, None, dp, kv_ax, hd_ax)
+        return P(None, dp, None, kv_ax, hd_ax)
+
+    def leaf_spec(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:
+            return kv_like(leaf)
+        if len(shp) == 4:    # ssm state (B,H,P,N) or mlstm (B,H,N,P+1)
+            h_ax = "model" if shp[1] % m == 0 else None
+            return P(dp if not seq_sharded else None, h_ax, None, None)
+        if len(shp) == 3:    # conv buffer (B, W-1, C)
+            c_ax = "model" if shp[2] % m == 0 else None
+            return P(dp if not seq_sharded else None, None, c_ax)
+        if len(shp) == 2:    # slstm state (B, d)
+            d_ax = "model" if shp[1] % m == 0 else None
+            return P(dp if not seq_sharded else None, d_ax)
+        return P(*([None] * len(shp)))
+
+    return jax.tree.map(leaf_spec, cache_abs)
+
+
+def decode_inputs(cfg: ModelConfig, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return toks, pos
+
+
+def decode_input_pspecs(cfg: ModelConfig, shape_name: str, mesh):
+    shape = INPUT_SHAPES[shape_name]
+    dp = _dp(mesh)
+    tok_ps = P(dp, None) if shape.global_batch > 1 else P(None, None)
+    return tok_ps, P()
+
+
+def logits_pspec(cfg: ModelConfig, mesh, batch_sharded: bool = True):
+    dp = _dp(mesh)
+    v_ax = "model" if cfg.vocab % _msize(mesh) == 0 else None
+    return P(dp if batch_sharded else None, None, v_ax)

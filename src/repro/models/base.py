@@ -1,0 +1,137 @@
+"""Parameter/spec framework shared by every model in the zoo.
+
+Models are pure functions over pytrees.  Each model declares its
+parameters once as a nested dict of :class:`ParamSpec` (shape + logical
+axis names + initializer); from that single declaration we derive
+  * the initialized parameter pytree (``init_params``),
+  * the PartitionSpec pytree for pjit (``partition_specs``), via the
+    logical-axis rules in ``launch/sharding.py``,
+  * byte/param accounting for the communication-cost model (eq. 9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary.  ``launch/sharding.py`` maps these to mesh axes.
+#   layers   - stacked scan dimension (never sharded)
+#   embed    - d_model
+#   mlp      - feed-forward hidden
+#   heads    - attention heads (q)
+#   kv_heads - attention kv heads
+#   head_dim - per-head dim
+#   vocab    - vocabulary
+#   expert   - MoE expert dimension
+#   state    - SSM state dim
+#   conv/spatial/channel - CNN dims (never sharded; FD-CNN is tiny)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # stddev override; default fan-in
+    dtype: Any = None             # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: ParamSpec, key, dtype):
+    dt = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    # fan-in scaled normal (truncation unnecessary for our purposes)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key, dtype=jnp.float32):
+    """Materialize a parameter pytree from a ParamSpec pytree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_leaf_init(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (for dry-run lowering, no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def param_bytes(specs, dtype_bytes: int = 4) -> int:
+    return param_count(specs) * dtype_bytes
+
+
+def tree_paths(tree, is_leaf=None):
+    """List of '/'-joined key paths, flattened in tree order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    out = []
+    for path, _leaf in flat:
+        out.append("/".join(_path_str(p) for p in path))
+    return out
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def maybe_constrain(x, *axes):
+    """with_sharding_constraint iff the named mesh axes exist and divide
+    the corresponding dim; no-op outside a mesh (CPU tests).  Used for
+    intermediates whose sharding GSPMD can't infer (MoE dispatch buffers)
+    or where we override its choice (sequence-parallel activations)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or mesh.empty:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is not None and ax in sizes and dim % sizes[ax] == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

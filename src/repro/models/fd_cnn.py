@@ -1,0 +1,92 @@
+"""FD-CNN — the fall-detection CNN used by the CEFL paper [He et al. 2019].
+
+Input: (B, 20, 20, 3) RGB bitmap windows of 3-axial acceleration +
+angular-velocity signals.  Architecture (paper §V-B): conv 5×5×3 →
+maxpool 2×2 → conv 5×5×32 → maxpool 2×2 → fc 512 → fc 8 (softmax),
+ReLU activations, Adam(1e-4), batch 32, cross-entropy.
+
+The layer list order below *is* the CEFL layer order: the base/
+personalized split (paper Step 4) selects a prefix of this list, and the
+communication-cost model (eq. 9) sums per-layer byte sizes δ_l in this
+order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+
+IMG = 20
+N_CLASSES = 8
+
+FD_CNN_CONFIG = ModelConfig(
+    name="fd_cnn", arch_type="cnn", n_layers=4, d_model=512, n_heads=1,
+    n_kv_heads=1, d_ff=512, vocab=N_CLASSES, causal=False,
+    learning_rate=1e-4, base_layers=2,
+    citation="[He et al., IEEE Sensors J. 19(13), 2019; CEFL paper §V-B]")
+
+
+def fd_cnn_specs(cfg: ModelConfig | None = None):
+    # SAME padding: 20→20 →pool→ 10→10 →pool→ 5; flatten 5*5*32 = 800.
+    return {
+        "conv1": {"w": ParamSpec((5, 5, 3, 3), (None, None, None, None)),
+                  "b": ParamSpec((3,), (None,), "zeros")},
+        "conv2": {"w": ParamSpec((5, 5, 3, 32), (None, None, None, None)),
+                  "b": ParamSpec((32,), (None,), "zeros")},
+        "fc1": {"w": ParamSpec((5 * 5 * 32, 512), ("mlp", "embed")),
+                "b": ParamSpec((512,), ("embed",), "zeros")},
+        "fc2": {"w": ParamSpec((512, N_CLASSES), ("embed", "vocab")),
+                "b": ParamSpec((N_CLASSES,), ("vocab",), "zeros")},
+    }
+
+
+# CEFL layer order (prefix-B base/personalized split, eq. 6-7, eq. 9)
+FD_CNN_LAYER_ORDER = ("conv1", "conv2", "fc1", "fc2")
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def fd_cnn_forward(params, images):
+    """images: (B, 20, 20, 3) -> logits (B, 8)."""
+    x = images.astype(jnp.float32)
+    x = _pool(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _pool(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def fd_cnn_loss(params, batch):
+    logits = fd_cnn_forward(params, batch["x"])
+    labels = jax.nn.one_hot(batch["y"], N_CLASSES)
+    loss = -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), axis=-1))
+    return loss
+
+
+def fd_cnn_accuracy(params, batch):
+    logits = fd_cnn_forward(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+def layer_sizes_bytes(dtype_bytes: int = 4) -> dict[str, int]:
+    """δ_l of eq. 9: per-layer parameter bytes in CEFL layer order."""
+    specs = fd_cnn_specs()
+    out = {}
+    for name in FD_CNN_LAYER_ORDER:
+        n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+            specs[name], is_leaf=lambda t: isinstance(t, ParamSpec)))
+        out[name] = n * dtype_bytes
+    return out

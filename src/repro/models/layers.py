@@ -1,0 +1,305 @@
+"""Shared neural-net layers: norms, MLPs, embeddings, rotary GQA attention.
+
+All functions are pure: ``f(cfg, params, x, ...) -> y``.  Attention
+supports three execution modes used across the input-shape catalog:
+
+  * full forward (train / prefill), causal or bidirectional, with an
+    optional sliding-window band mask,
+  * rolling-buffer KV-cache decode (one new token against a cache of
+    ``W`` positions, where ``W = seq_len`` for full attention or the
+    sliding window for the long-context variant).
+
+The einsum path here is the reference implementation; the Pallas flash
+kernel in ``repro.kernels.flash_attention`` is the TPU hot-path and is
+validated against this math (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+
+# ---------------------------------------------------------------- norms
+
+
+def norm_params(cfg: ModelConfig, name: str = "norm"):
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones"),
+                "bias": ParamSpec((d,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_params(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act == "silu_gated":
+        return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+                "wg": ParamSpec((d, f), ("embed", "mlp")),
+                "wo": ParamSpec((f, d), ("mlp", "embed"))}
+    return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed"))}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+    if cfg.mlp_act == "silu_gated":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(h) * g
+    elif cfg.mlp_act == "relu_sq":        # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embed_params(cfg: ModelConfig):
+    return {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed")}
+
+
+def head_params(cfg: ModelConfig):
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))}
+
+
+def embed_tokens(p, tokens, dtype):
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def lm_logits(p, x):
+    return jnp.einsum("...d,dv->...v", x, p["w"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def attn_params(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {"wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+         "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+         "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+         "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"))}
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    return p
+
+
+def _qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(dt))
+    k = jnp.einsum("...d,dhk->...hk", x, p["wk"].astype(dt))
+    v = jnp.einsum("...d,dhk->...hk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd) k: (B,T,KV,hd) -> (B,KV,G,S,T)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(probs, v, p, dtype):
+    B, KV, G, S, T = probs.shape
+    o = jnp.einsum("bkgst,btkh->bskgh", probs.astype(dtype), v)
+    o = o.reshape(B, S, KV * G, -1)
+    return jnp.einsum("...hk,hkd->...d", o, p["wo"].astype(dtype))
+
+
+NEG_INF = -1e30
+
+
+def _band_mask(cfg: ModelConfig, qi, kj):
+    """Boolean mask for query positions ``qi`` (Sq,1) vs key positions (1,Sk)."""
+    mask = jnp.ones(jnp.broadcast_shapes(qi.shape, kj.shape), bool)
+    if cfg.causal:
+        mask &= kj <= qi
+    if cfg.sliding_window is not None:
+        mask &= (qi - kj) < cfg.sliding_window
+        if not cfg.causal:
+            mask &= (kj - qi) < cfg.sliding_window
+    return mask
+
+
+def _attend_chunked(cfg, q, k, v, p, dtype, q_chunk: int):
+    """Scan over query chunks so peak score memory is Sq_chunk × Sk.
+
+    The chunk body is checkpointed: a bare scan would SAVE each chunk's
+    (Sq_chunk × Sk) probs for the backward pass, recreating the full S×S
+    footprint it exists to avoid (§Perf granite iterations 2-4)."""
+    B, S, H, hd = q.shape
+    n = S // q_chunk
+    qr = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def chunk_out(qc, i0):
+        scores = _gqa_scores(qc, k).astype(jnp.float32)
+        qi = (i0 + jnp.arange(q_chunk))[:, None]
+        kj = jnp.arange(S)[None, :]
+        scores = jnp.where(_band_mask(cfg, qi, kj), scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(probs, v, p, dtype)
+
+    def step(_, qc_i):
+        qc, i0 = qc_i
+        return None, chunk_out(qc, i0)
+
+    _, outs = jax.lax.scan(step, None, (qr, jnp.arange(n) * q_chunk))
+    return outs.transpose(1, 0, 2, 3).reshape(B, S, -1)
+
+
+# Above this sequence length the forward pass chunks queries (flash-style)
+# instead of materializing the full S×S score matrix.
+Q_CHUNK_THRESHOLD = 8_192
+Q_CHUNK = 1_024
+
+
+def _q_chunk_for(cfg: ModelConfig, S: int) -> int | None:
+    if cfg.attn_q_chunk and S % cfg.attn_q_chunk == 0 and S > cfg.attn_q_chunk:
+        return cfg.attn_q_chunk
+    if S > Q_CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        return Q_CHUNK
+    return None
+
+
+def full_attention(cfg: ModelConfig, p, x, *, pos_offset: int = 0):
+    """Train / prefill attention over the whole sequence."""
+    B, S, _ = x.shape
+    positions = pos_offset + jnp.arange(S)[None, :]
+    q, k, v = _qkv(cfg, p, x, positions)
+    qc = _q_chunk_for(cfg, S)
+    if qc is not None:
+        return _attend_chunked(cfg, q, k, v, p, x.dtype, qc)
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    scores = jnp.where(_band_mask(cfg, qi, kj), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, p, x.dtype)
+
+
+def is_quantized_cache(cfg: ModelConfig) -> bool:
+    return (cfg.cache_dtype is not None
+            and jnp.dtype(cfg.cache_dtype).itemsize == 1)
+
+
+def quantize_kv(t, qdtype):
+    """Per-(batch, pos, kv-head) max-abs scaling into a 1-byte dtype.
+    t: (B, S, KV, hd) -> (q: same shape in qdtype, scale: (B, S, KV, 1) f32)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6)
+    q = jnp.round(t.astype(jnp.float32) / scale * 127.0).astype(qdtype)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) / 127.0 * scale).astype(dtype)
+
+
+def decode_attention(cfg: ModelConfig, p, x, cache_k, cache_v, pos,
+                     k_scale=None, v_scale=None):
+    """One-token decode against a rolling-buffer KV cache.
+
+    x:        (B, 1, d_model)  — the new token's activations
+    cache_k/v:(B, W, KV, hd)   — rolling buffer (W = window or full seq)
+    pos:      ()  int32        — number of tokens already in context
+    returns (out, new_cache_k, new_cache_v)
+    """
+    B, W = cache_k.shape[0], cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+
+    slot = jnp.mod(pos, W)
+    quant = k_scale is not None
+
+    def upd(cache, t, axis=1):
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, t.astype(cache.dtype), slot, axis=axis)
+
+    if quant:
+        kq, ks = quantize_kv(k, cache_k.dtype)
+        vq, vs = quantize_kv(v, cache_v.dtype)
+        ck, cv = upd(cache_k, kq), upd(cache_v, vq)
+        nks, nvs = upd(k_scale, ks), upd(v_scale, vs)
+        k_full = dequantize_kv(ck, nks, q.dtype)
+        v_full = dequantize_kv(cv, nvs, q.dtype)
+    else:
+        ck, cv = upd(cache_k, k), upd(cache_v, v)
+        nks = nvs = None
+        k_full, v_full = ck.astype(q.dtype), cv.astype(q.dtype)
+
+    scores = _gqa_scores(q, k_full).astype(jnp.float32)  # (B,KV,G,1,W)
+    idx = jnp.arange(W)
+    valid = idx <= slot                       # written this far this wrap
+    valid |= pos >= W                         # fully-wrapped buffer: all valid
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v_full, p, x.dtype)
+    if quant:
+        return out, ck, cv, nks, nvs
+    return out, ck, cv
+
+
+def prefill_cache(cfg: ModelConfig, p, x, *, window: int):
+    """Run full attention AND return the trailing-``window`` KV cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(cfg, p, x, positions)
+    qc = _q_chunk_for(cfg, S)
+    if qc is not None:
+        out = _attend_chunked(cfg, q, k, v, p, x.dtype, qc)
+    else:
+        scores = _gqa_scores(q, k).astype(jnp.float32)
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        scores = jnp.where(_band_mask(cfg, qi, kj), scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v, p, x.dtype)
+    w = min(window, S)
+    return out, k[:, S - w:], v[:, S - w:]

@@ -1,0 +1,122 @@
+"""Top-k mixture-of-experts layer with sort-based token dispatch.
+
+TPU-native design: instead of a (tokens × experts × capacity) one-hot
+dispatch tensor (O(T·E·C) memory), token→expert assignments are sorted
+by expert id and scattered into a dense (E, C, d) buffer, so the expert
+computation is a pair of MXU-friendly batched einsums.  Tokens past an
+expert's capacity are dropped (standard capacity-factor semantics); the
+router aux loss keeps the load balanced so drops stay rare.
+
+Experts are sharded over the ``expert`` logical axis (→ mesh ``model``),
+which turns dispatch/return into all-to-alls under pjit — exactly the
+collective pattern the roofline's collective term measures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+
+
+def moe_params(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "expert")),
+        "wi": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts)
+    return max(128, -(-c // 128) * 128)   # 128-aligned (shardable over data)
+
+
+# The (E, C, d) dispatch buffer is produced by a scatter whose sharding
+# GSPMD cannot infer — without an explicit constraint it replicates the
+# buffer on every device, which for granite (E=40, not divisible by the
+# model axis) ballooned the train step to TBs of temp (EXPERIMENTS.md
+# §Dry-run probe).  E → model when divisible, C → data.
+from repro.models.base import maybe_constrain as _constrain
+
+
+# Token-chunk size for the dispatch buffer: MoE over T tokens needs an
+# (E, ~T·k·cf/E, d) buffer; chunking bounds it regardless of sequence length
+# (prefill_32k is 1M tokens).  Chunks are independent → lax.scan.
+MOE_TOKEN_CHUNK = 65_536
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss). Chunks tokens to bound dispatch memory."""
+    B, S, d = x.shape
+    T = B * S
+    if T > MOE_TOKEN_CHUNK and T % MOE_TOKEN_CHUNK == 0:
+        nc = T // MOE_TOKEN_CHUNK
+        flat = x.reshape(nc, MOE_TOKEN_CHUNK, 1, d)
+
+        def step(_, xc):
+            y, aux = _moe_tokens(cfg, p, xc)
+            return None, (y, aux)
+
+        _, (ys, auxes) = jax.lax.scan(step, None, flat)
+        return ys.reshape(B, S, d), jnp.mean(auxes)
+    return _moe_tokens(cfg, p, x)
+
+
+def _moe_tokens(cfg: ModelConfig, p, x):
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    C = capacity(cfg, T)
+    tok = x.reshape(T, d)
+    dt = x.dtype
+
+    logits = jnp.einsum("td,de->te", tok, p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, K)               # (T,K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # ---- aux load-balance loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(density * router_mean)
+
+    # ---- sort-based dispatch
+    flat_e = expert_idx.reshape(-1)                          # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    src_tok = order // K                                     # token id per slot
+    # position of each assignment within its expert's queue
+    pos = jnp.arange(T * K) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+
+    # dispatch precision (§Perf lever): the scatter→buf edge is the
+    # token all-to-all when experts are model-sharded; storing the
+    # buffer in fp8 halves those link bytes, compute stays in `dt`
+    dd = cfg.moe_dispatch_dtype or dt
+    buf = jnp.zeros((E, C, d), dd)
+    # the (T·K, d) gather output feeding the scatter is also constrained —
+    # GSPMD otherwise materializes it replicated (§Perf granite iter 7)
+    expanded = _constrain(
+        jnp.where(keep[:, None], tok[src_tok], 0).astype(dd), "data", None)
+    buf = buf.at[sorted_e, pos_c].add(expanded)
+    buf = _constrain(buf, "model", "data", None)
+
+    # ---- expert computation (batched over E; sharded over `expert`)
+    h = jnp.einsum("ecd,edf->ecf", buf.astype(dt), p["wi"].astype(dt))
+    g = jnp.einsum("ecd,edf->ecf", buf.astype(dt), p["wg"].astype(dt))
+    h = jax.nn.silu(h) * g
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt)).astype(dd)
+    out_buf = _constrain(out_buf, "model", "data", None)
+
+    # ---- return path: gather back, unsort, weight by gate
+    gathered = out_buf[sorted_e, pos_c].astype(dt) * keep[:, None].astype(dt)
+    unsorted = _constrain(jnp.zeros((T * K, d), dt).at[order].set(gathered),
+                          "data", None)
+    y = (unsorted.reshape(T, K, d)
+         * gate[..., None].astype(dt)).sum(axis=1)
+    return y.reshape(B, S, d), aux

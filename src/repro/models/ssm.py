@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+TPU adaptation: the CUDA Mamba2 kernel's warp-level scan is replaced by
+the chunked SSD algorithm — quadratic attention-like math *within* a
+chunk (MXU einsums) and a `lax.scan` carry *between* chunks.  This keeps
+peak memory at O(L·Q) instead of O(L²) and maps the sequential part onto
+a length-L/Q scan, which is the TPU-idiomatic trade.
+
+Decode is a single state update: S ← a·S + dt·x⊗B, y = C·S + D·x with a
+(B, H, P, N) state carried in the serve cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+
+CONV_W = 4
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_params(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner + 2 * N + H), ("embed", "mlp")),
+        "conv": ParamSpec((CONV_W, d_inner + 2 * N), (None, "mlp"), "normal",
+                          scale=0.1),
+        "a_log": ParamSpec((H,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((H,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((H,), ("heads",), "zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, P, N = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv, width CONV_W. xbc: (B,L,C), w: (W,C)."""
+    pad = jnp.pad(xbc, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(CONV_W))
+    return jax.nn.silu(out)
+
+
+def _gates(p, dt_raw, a_log):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(a_log.astype(jnp.float32))                          # (H,)
+    log_decay = dt * a                                                # (B,L,H) ≤0
+    return dt, log_decay
+
+
+def apply_ssm(cfg: ModelConfig, p, x, state=None, pos=None):
+    """Full-sequence forward.  x: (B, L, d).  Returns (y, final_state)."""
+    B, L, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    Q = min(cfg.ssm_chunk, L)
+    dt_ = x.dtype
+
+    proj = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_))
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    conv_tail = xbc_raw[:, -(CONV_W - 1):]          # decode re-entry buffer
+    xbc = _causal_conv(xbc_raw, p["conv"].astype(dt_))
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, L, H, P)
+    dt, log_decay = _gates(p, dt_raw, p["a_log"])
+
+    # pad to a chunk multiple; padded steps get dt=0 (no input) and
+    # log_decay=0 (decay 1) so they leave the carried state untouched.
+    Lp = -(-L // Q) * Q
+    if Lp != L:
+        pad = Lp - L
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+
+    nc = Lp // Q
+    xs_c = xs.reshape(B, nc, Q, H, P)
+    B_c = Bmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, H)
+    ld_c = log_decay.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(ld_c, axis=2)                      # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within chunk)
+    # M[t,s] = exp(cum_t - cum_s) * (C_t·B_s) * dt_s, masked s<=t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay_m = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bntk,bnsk->bnts", C_c, B_c)                 # (B,nc,Q,Q)
+    M = decay_m * cb[..., None] * dt_c[:, :, None, :, :]         # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", M,
+                         xs_c.astype(jnp.float32))
+
+    # ---- per-chunk summary state: S_n = Σ_s exp(cum_Q - cum_s) dt_s x_s B_s^T
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dt_c               # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnsh,bnshp,bnsk->bnhpk",
+                             tail, xs_c.astype(jnp.float32), B_c)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+    init = (jnp.zeros((B, H, P, N), jnp.float32) if state is None
+            else state.astype(jnp.float32))
+
+    def scan_fn(s, inp):
+        cd, cs = inp
+        s_new = s * cd[:, :, None, None] + cs
+        return s_new, s                                          # emit state *entering* chunk
+
+    final_state, entry_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)))
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution: C_t · (exp(cum_t) * S_entry)
+    y_inter = jnp.einsum("bntk,bnth,bnhpk->bnthp",
+                         C_c, jnp.exp(cum), entry_states)
+
+    y = (y_intra + y_inter).reshape(B, Lp, H, P)[:, :L]
+    xs = xs[:, :L]
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = (y.reshape(B, L, d_inner) * jax.nn.silu(z.astype(jnp.float32)))
+    out = jnp.einsum("ble,ed->bld", y.astype(dt_), p["out_proj"].astype(dt_))
+    return out, {"state": final_state.astype(jnp.float32), "conv": conv_tail}
+
+
+def decode_ssm(cfg: ModelConfig, p, x, state, conv_buf):
+    """Single-token decode.  x: (B,1,d); state: (B,H,P,N);
+    conv_buf: (B, CONV_W-1, d_inner+2N) rolling conv inputs."""
+    B = x.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    dt_ = x.dtype
+    proj = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    window = jnp.concatenate([conv_buf, xbc], axis=1)            # (B,W,C)
+    new_buf = window[:, 1:]
+    w = p["conv"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))[:, None]
+
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, 1, H, P).astype(jnp.float32)
+    dt, log_decay = _gates(p, dt_raw, p["a_log"])                # (B,1,H)
+    a = jnp.exp(log_decay)[:, 0]                                 # (B,H)
+    upd = jnp.einsum("bh,bhp,bk->bhpk", dt[:, 0], xs[:, 0], Bmat[:, 0].astype(jnp.float32))
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bk,bhpk->bhp", Cmat[:, 0].astype(jnp.float32), new_state)
+    y = y + p["d_skip"][None, :, None] * xs[:, 0]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("ble,ed->bld", y.astype(dt_), p["out_proj"].astype(dt_))
+    return out, new_state, new_buf
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d_inner + 2 * N), dtype),
+    }

@@ -1,0 +1,410 @@
+"""Model assembly: block definitions, scan-over-layers stacks, and the
+three entry points every architecture exposes:
+
+    forward(cfg, params, batch)            -> (logits, aux)      train/encode
+    prefill(cfg, params, batch, window)    -> (logits, cache)    inference prefill
+    decode_step(cfg, params, cache, tok, pos) -> (logits, cache) one-token decode
+
+Homogeneous stacks (dense / moe / audio / vlm) are `lax.scan`ned over a
+stacked-parameter pytree so the HLO stays O(1) in depth (essential for
+the 94/96-layer archs).  Heterogeneous stacks (xlstm's sLSTM/mLSTM mix,
+zamba2's mamba+shared-attention hybrid) use a python loop — they are
+≤38 layers and the shared/irregular parameters don't fit a scan xs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.base import ParamSpec, init_params, is_spec
+
+# ===================================================================== specs
+
+
+def _stack(spec_tree, n: int):
+    """Add a leading stacked-layers dim to every ParamSpec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def dense_block_specs(cfg: ModelConfig):
+    return {"ln1": L.norm_params(cfg), "attn": L.attn_params(cfg),
+            "ln2": L.norm_params(cfg), "mlp": L.mlp_params(cfg)}
+
+
+def moe_block_specs(cfg: ModelConfig):
+    return {"ln1": L.norm_params(cfg), "attn": L.attn_params(cfg),
+            "ln2": L.norm_params(cfg), "moe": MOE.moe_params(cfg)}
+
+
+def mamba_block_specs(cfg: ModelConfig):
+    return {"ln": L.norm_params(cfg), "ssm": SSM.ssm_params(cfg)}
+
+
+def model_specs(cfg: ModelConfig):
+    """Full parameter ParamSpec tree for an architecture."""
+    at = cfg.arch_type
+    specs: dict[str, Any] = {}
+    if at == "audio":
+        specs["frontend_proj"] = {
+            "w": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+            "b": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    else:
+        specs["embed"] = L.embed_params(cfg)
+    if at == "vlm":
+        specs["img_proj"] = {
+            "w": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+            "b": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+
+    if at in ("dense", "audio", "vlm"):
+        specs["blocks"] = _stack(dense_block_specs(cfg), cfg.n_layers)
+    elif at == "moe":
+        specs["blocks"] = _stack(moe_block_specs(cfg), cfg.n_layers)
+    elif at == "ssm":        # xlstm: per-layer list (mixed block kinds)
+        specs["blocks"] = [
+            {"ln": L.norm_params(cfg),
+             **({"slstm": XL.slstm_params(cfg)} if i in cfg.slstm_at
+                else {"mlstm": XL.mlstm_params(cfg)})}
+            for i in range(cfg.n_layers)]
+    elif at == "hybrid":     # zamba2: mamba stack + one shared attn block
+        specs["blocks"] = [mamba_block_specs(cfg) for _ in range(cfg.n_layers)]
+        specs["shared_attn"] = {"ln1": L.norm_params(cfg),
+                                "attn": L.attn_params(cfg),
+                                "ln2": L.norm_params(cfg),
+                                "mlp": L.mlp_params(cfg)}
+    else:
+        raise ValueError(at)
+
+    specs["final_norm"] = L.norm_params(cfg)
+    specs["head"] = L.head_params(cfg)
+    return specs
+
+
+# ================================================================= embedding
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """Produce the (B, S, d_model) input activations for any modality."""
+    dt = cfg.compute_dtype
+    at = cfg.arch_type
+    if at == "audio":
+        fp = params["frontend_proj"]
+        return (jnp.einsum("bsf,fd->bsd", batch["frames"].astype(dt),
+                           fp["w"].astype(dt)) + fp["b"].astype(dt))
+    x = L.embed_tokens(params["embed"], batch["tokens"], dt)
+    if at == "vlm" and "img_emb" in batch:
+        ip = params["img_proj"]
+        img = (jnp.einsum("bnf,fd->bnd", batch["img_emb"].astype(dt),
+                          ip["w"].astype(dt)) + ip["b"].astype(dt))
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+# ============================================================= block forward
+
+
+def _sp(cfg, x):
+    """Sequence-parallel lever (§Perf): shard the residual stream's seq
+    dim over `model` so remat-saved block inputs are 1/TP the bytes; XLA
+    re-gathers at the qkv/mlp projections (RS+AG in place of the plain
+    AR — same link bytes, TP× less live activation memory)."""
+    if cfg.seq_parallel:
+        from repro.models.base import maybe_constrain
+        return maybe_constrain(x, "data", "model", None)
+    return x
+
+
+def _dense_block(cfg, p, x, pos_offset=0):
+    x = _sp(cfg, x)
+    x = x + L.full_attention(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                             pos_offset=pos_offset)
+    x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    return x
+
+
+def _moe_block(cfg, p, x, pos_offset=0):
+    x = _sp(cfg, x)
+    x = x + L.full_attention(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                             pos_offset=pos_offset)
+    y, aux = MOE.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, aux
+
+
+# ================================================================== forward
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_hidden: bool = False):
+    """Full-sequence forward (training / encoding).  Returns (logits, aux),
+    or (hidden, aux) with ``return_hidden`` (the chunked-loss lever applies
+    the LM head itself, bounding the fp32 logits buffer)."""
+    x = embed_inputs(cfg, params, batch)
+    at = cfg.arch_type
+    aux = jnp.zeros((), jnp.float32)
+
+    if at in ("dense", "audio", "vlm"):
+        def body(h, bp):
+            f = functools.partial(_dense_block, cfg)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            return f(bp, h), None
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda h, bp: body(h, bp), x, params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, _ = body(x, bp)
+
+    elif at == "moe":
+        def mbody(carry, bp):
+            h, a = carry
+            f = functools.partial(_moe_block, cfg)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            h, aux_l = f(bp, h)
+            return (h, a + aux_l), None
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(mbody, (x, aux), params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                (x, aux), _ = mbody((x, aux), bp)
+
+    elif at == "ssm":
+        for i, bp in enumerate(params["blocks"]):
+            h = L.apply_norm(cfg, bp["ln"], x)
+            if i in cfg.slstm_at:
+                y, _ = XL.apply_slstm(cfg, bp["slstm"], h)
+            else:
+                y, _ = XL.apply_mlstm(cfg, bp["mlstm"], h)
+            x = x + y
+
+    elif at == "hybrid":
+        sa = params["shared_attn"]
+        for i, bp in enumerate(params["blocks"]):
+            y, _ = SSM.apply_ssm(cfg, bp["ssm"], L.apply_norm(cfg, bp["ln"], x))
+            x = x + y
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                x = _dense_block(cfg, sa, x)
+    else:
+        raise ValueError(at)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    return L.lm_logits(params["head"], x), aux
+
+
+# ============================================================ prefill/decode
+
+
+def _align_cache(t, S: int, window: int, seq_axis: int):
+    """Place trailing-window keys into rolling-buffer slots (slot = pos % W).
+
+    After a prefill of S tokens the buffer must satisfy the decode-side
+    invariant ``cache[p % W] = key at absolute position p``.  For S < W the
+    trailing keys already sit at slots 0..S-1 and we pad; for S ≥ W we roll
+    the window by S mod W.
+    """
+    w = t.shape[seq_axis]
+    if S < window:
+        pad = [(0, 0)] * t.ndim
+        pad[seq_axis] = (0, window - w)
+        return jnp.pad(t, pad)
+    return jnp.roll(t, S % window, axis=seq_axis)
+
+
+def init_cache(cfg: ModelConfig, batch: int, window: int, dtype=None):
+    """Abstract-friendly cache init (concrete zeros).
+
+    ``cfg.cache_dtype`` (e.g. fp8) overrides the storage dtype — the
+    §Perf lever that halves the decode memory term; reads upcast to the
+    compute dtype inside decode_attention."""
+    dt = dtype or cfg.cache_dtype or cfg.compute_dtype
+    at = cfg.arch_type
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if at in ("dense", "vlm", "moe"):
+        z = jnp.zeros((cfg.n_layers, batch, window, kv, hd), dt)
+        cache = {"k": z, "v": z}
+        if L.is_quantized_cache(cfg):
+            s = jnp.zeros((cfg.n_layers, batch, window, kv, 1), jnp.float32)
+            cache.update({"k_scale": s, "v_scale": s})
+        return cache
+    if at == "ssm":
+        return [
+            {"slstm": XL.init_slstm_state(cfg, batch)} if i in cfg.slstm_at
+            else {"mlstm": XL.init_mlstm_state(cfg, batch)}
+            for i in range(cfg.n_layers)]
+    if at == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        return {
+            "ssm": [SSM.init_ssm_cache(cfg, batch, dt)
+                    for _ in range(cfg.n_layers)],
+            "attn_k": jnp.zeros((n_attn, batch, window, kv, hd), dt),
+            "attn_v": jnp.zeros((n_attn, batch, window, kv, hd), dt),
+        }
+    raise ValueError(f"no decode cache for arch_type={at}")
+
+
+def prefill(cfg: ModelConfig, params, batch, window: int):
+    """Encode a prompt, returning last-token logits + a decode cache."""
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    at = cfg.arch_type
+
+    if at in ("dense", "vlm", "moe"):
+        def body(h, bp):
+            hn = L.apply_norm(cfg, bp["ln1"], h)
+            a, ck, cv = L.prefill_cache(cfg, bp["attn"], hn, window=window)
+            h = h + a
+            hn2 = L.apply_norm(cfg, bp["ln2"], h)
+            if at == "moe":
+                y, _ = MOE.apply_moe(cfg, bp["moe"], hn2)
+            else:
+                y = L.apply_mlp(cfg, bp["mlp"], hn2)
+            return h + y, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        if L.is_quantized_cache(cfg):
+            ks, ksc = L.quantize_kv(ks, cfg.cache_dtype)
+            vs, vsc = L.quantize_kv(vs, cfg.cache_dtype)
+            cache = {
+                "k": _align_cache(ks, S, window, seq_axis=2),
+                "v": _align_cache(vs, S, window, seq_axis=2),
+                "k_scale": _align_cache(ksc, S, window, seq_axis=2),
+                "v_scale": _align_cache(vsc, S, window, seq_axis=2)}
+        else:
+            cdt = cfg.cache_dtype or ks.dtype
+            ks, vs = (_align_cache(t.astype(cdt), S, window, seq_axis=2)
+                      for t in (ks, vs))
+            cache = {"k": ks, "v": vs}
+
+    elif at == "ssm":
+        cache = []
+        for i, bp in enumerate(params["blocks"]):
+            h = L.apply_norm(cfg, bp["ln"], x)
+            if i in cfg.slstm_at:
+                y, st = XL.apply_slstm(cfg, bp["slstm"], h)
+                cache.append({"slstm": st})
+            else:
+                y, st = XL.apply_mlstm(cfg, bp["mlstm"], h)
+                cache.append({"mlstm": st})
+            x = x + y
+
+    elif at == "hybrid":
+        sa = params["shared_attn"]
+        ssm_cache, aks, avs = [], [], []
+        for i, bp in enumerate(params["blocks"]):
+            y, st = SSM.apply_ssm(cfg, bp["ssm"], L.apply_norm(cfg, bp["ln"], x))
+            ssm_cache.append(st)
+            x = x + y
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                hn = L.apply_norm(cfg, sa["ln1"], x)
+                a, ck, cv = L.prefill_cache(cfg, sa["attn"], hn, window=window)
+                x = x + a
+                x = x + L.apply_mlp(cfg, sa["mlp"], L.apply_norm(cfg, sa["ln2"], x))
+                cdt = cfg.cache_dtype or ck.dtype
+                aks.append(_align_cache(ck.astype(cdt), S, window, seq_axis=1))
+                avs.append(_align_cache(cv.astype(cdt), S, window, seq_axis=1))
+        cache = {"ssm": ssm_cache,
+                 "attn_k": jnp.stack(aks) if aks else jnp.zeros((0,)),
+                 "attn_v": jnp.stack(avs) if avs else jnp.zeros((0,))}
+    else:
+        raise ValueError(f"prefill unsupported for {at}")
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(params["head"], x[:, -1:])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One-token decode.  tokens: (B,1) int32; pos: () int32 = context length."""
+    dt = cfg.compute_dtype
+    x = L.embed_tokens(params["embed"], tokens, dt)
+    at = cfg.arch_type
+
+    if at in ("dense", "vlm", "moe"):
+        quant = L.is_quantized_cache(cfg)
+
+        def body(h, xs):
+            if quant:
+                bp, ck, cv, ksc, vsc = xs
+            else:
+                bp, ck, cv = xs
+                ksc = vsc = None
+            hn = L.apply_norm(cfg, bp["ln1"], h)
+            att = L.decode_attention(cfg, bp["attn"], hn, ck, cv, pos,
+                                     k_scale=ksc, v_scale=vsc)
+            a, new_c = att[0], att[1:]
+            h = h + a
+            hn2 = L.apply_norm(cfg, bp["ln2"], h)
+            if at == "moe":
+                y, _ = MOE.apply_moe(cfg, bp["moe"], hn2)
+            else:
+                y = L.apply_mlp(cfg, bp["mlp"], hn2)
+            return h + y, new_c
+
+        if quant:
+            xs = (params["blocks"], cache["k"], cache["v"],
+                  cache["k_scale"], cache["v_scale"])
+            x, (ks, vs, ksc, vsc) = jax.lax.scan(body, x, xs)
+            new_cache = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc}
+        else:
+            x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                                 cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs}
+
+    elif at == "ssm":
+        new_cache = []
+        for i, bp in enumerate(params["blocks"]):
+            h = L.apply_norm(cfg, bp["ln"], x)
+            if i in cfg.slstm_at:
+                y, st = XL.decode_slstm(cfg, bp["slstm"], h, cache[i]["slstm"])
+                new_cache.append({"slstm": st})
+            else:
+                y, st = XL.decode_mlstm(cfg, bp["mlstm"], h, cache[i]["mlstm"])
+                new_cache.append({"mlstm": st})
+            x = x + y
+
+    elif at == "hybrid":
+        sa = params["shared_attn"]
+        new_ssm, n_attn = [], 0
+        nk = cache["attn_k"]
+        nv = cache["attn_v"]
+        for i, bp in enumerate(params["blocks"]):
+            c = cache["ssm"][i]
+            y, st, buf = SSM.decode_ssm(cfg, bp["ssm"],
+                                        L.apply_norm(cfg, bp["ln"], x),
+                                        c["state"], c["conv"])
+            new_ssm.append({"state": st, "conv": buf})
+            x = x + y
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                hn = L.apply_norm(cfg, sa["ln1"], x)
+                a, ck, cv = L.decode_attention(cfg, sa["attn"], hn,
+                                               nk[n_attn], nv[n_attn], pos)
+                nk = nk.at[n_attn].set(ck)
+                nv = nv.at[n_attn].set(cv)
+                x = x + a
+                x = x + L.apply_mlp(cfg, sa["mlp"], L.apply_norm(cfg, sa["ln2"], x))
+                n_attn += 1
+        new_cache = {"ssm": new_ssm, "attn_k": nk, "attn_v": nv}
+    else:
+        raise ValueError(f"decode unsupported for {at}")
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_logits(params["head"], x), new_cache
+
+
+# =============================================================== convenience
+
+
+def init_model(cfg: ModelConfig, key):
+    return init_params(model_specs(cfg), key, cfg.param_dtype)

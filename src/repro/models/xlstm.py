@@ -1,0 +1,206 @@
+"""xLSTM blocks: chunked mLSTM (matrix memory) and recurrent sLSTM.
+
+TPU adaptation notes (recorded per DESIGN.md):
+  * mLSTM's matrix-memory recurrence C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ is
+    the same algebraic form as SSD, so it is computed with the same
+    chunked scheme — quadratic-in-chunk einsums on the MXU plus a
+    between-chunk `lax.scan` — rather than a CUDA fused recurrent kernel.
+  * We use a sigmoid forget gate (log-sigmoid cumulative decay) and a
+    clipped exponential input gate instead of the paper's running-max
+    stabilizer; the normalizer n_t is carried as an extra value column.
+  * sLSTM has a true nonlinear hidden-to-hidden recurrence and cannot be
+    parallelized over time; it runs as a `lax.scan` over timesteps with
+    block-diagonal (per-head) recurrent weights, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+
+I_GATE_CAP = 10.0
+
+
+def _mdims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    P = d_inner // H          # value dim per head
+    N = P // 2                # query/key dim per head
+    return d_inner, H, P, N
+
+
+def mlstm_params(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N = _mdims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), ("embed", "mlp")),   # x-branch, z-gate
+        "wq": ParamSpec((d_inner, H, N), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((d_inner, H, N), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((d_inner, H, P), ("mlp", "heads", "head_dim")),
+        "wif": ParamSpec((d_inner, 2 * H), ("mlp", "heads"), "normal", scale=0.01),
+        "b_if": ParamSpec((2 * H,), ("heads",), "zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _chunked_linear(q, k, v, log_decay, gate_in, chunk, state=None):
+    """y_t = q_t · (Σ_{s≤t} exp(cum_t - cum_s)·gate_s·k_s v_sᵀ).
+
+    q,k: (B,L,H,N)  v: (B,L,H,P)  log_decay,gate_in: (B,L,H) (f32).
+    Returns (y (B,L,H,P) f32, final_state (B,H,N,P) f32).
+    """
+    B, L, H, N = q.shape
+    P = v.shape[-1]
+    Q = min(chunk, L)
+    Lp = -(-L // Q) * Q
+    if Lp != L:  # pad: gate 0 + decay 1 on padded steps leaves state intact
+        pad = ((0, 0), (0, Lp - L), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, Lp - L), (0, 0)))
+        gate_in = jnp.pad(gate_in, ((0, 0), (0, Lp - L), (0, 0)))
+    nc = Lp // Q
+    qc = q.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    gc = gate_in.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(log_decay.reshape(B, nc, Q, H), axis=2)
+
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    decay_m = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    qk = jnp.einsum("bnthk,bnshk->bntsh", qc, kc)
+    M = decay_m * qk * gc[:, :, None, :, :]
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", M, vc)
+
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * gc
+    chunk_state = jnp.einsum("bnsh,bnshk,bnshp->bnhkp", tail, kc, vc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+    init = (jnp.zeros((B, H, N, P), jnp.float32) if state is None
+            else state.astype(jnp.float32))
+
+    def scan_fn(s, inp):
+        cd, cs = inp
+        return s * cd[:, :, None, None] + cs, s
+
+    final, entry = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)))
+    entry = entry.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bnthk,bnth,bnhkp->bnthp", qc, jnp.exp(cum), entry)
+    return (y_intra + y_inter).reshape(B, Lp, H, P)[:, :L], final
+
+
+def apply_mlstm(cfg: ModelConfig, p, x, state=None):
+    B, L, d = x.shape
+    d_inner, H, P, N = _mdims(cfg)
+    dt_ = x.dtype
+    xb, z = jnp.split(jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_)), 2, -1)
+    q = jnp.einsum("ble,ehn->blhn", xb, p["wq"].astype(dt_)) / jnp.sqrt(N).astype(dt_)
+    k = jnp.einsum("ble,ehn->blhn", xb, p["wk"].astype(dt_))
+    v = jnp.einsum("ble,ehp->blhp", xb, p["wv"].astype(dt_))
+    if_ = (jnp.einsum("ble,eh->blh", xb, p["wif"].astype(dt_))
+           + p["b_if"].astype(dt_)).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(if_, 2, -1)
+    log_decay = jax.nn.log_sigmoid(f_raw)
+    gate_in = jnp.exp(jnp.minimum(i_raw, I_GATE_CAP))
+
+    # carry the normalizer as an extra value column
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones(v.shape[:-1] + (1,), jnp.float32)], -1)
+    y_aug, final = _chunked_linear(q, k, v_aug, log_decay, gate_in,
+                                   cfg.ssm_chunk or 256, state)
+    y, n = y_aug[..., :P], y_aug[..., P:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, L, d_inner).astype(dt_) * jax.nn.silu(z)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dt_)), final
+
+
+def decode_mlstm(cfg: ModelConfig, p, x, state):
+    """One-step decode. state: (B,H,N,P+1) f32."""
+    B = x.shape[0]
+    d_inner, H, P, N = _mdims(cfg)
+    dt_ = x.dtype
+    xb, z = jnp.split(jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_)), 2, -1)
+    q = jnp.einsum("ble,ehn->blhn", xb, p["wq"].astype(dt_))[:, 0] / jnp.sqrt(N).astype(dt_)
+    k = jnp.einsum("ble,ehn->blhn", xb, p["wk"].astype(dt_))[:, 0]
+    v = jnp.einsum("ble,ehp->blhp", xb, p["wv"].astype(dt_))[:, 0]
+    if_ = (jnp.einsum("ble,eh->blh", xb, p["wif"].astype(dt_))
+           + p["b_if"].astype(dt_)).astype(jnp.float32)[:, 0]
+    i_raw, f_raw = jnp.split(if_, 2, -1)
+    f = jax.nn.sigmoid(f_raw)
+    i = jnp.exp(jnp.minimum(i_raw, I_GATE_CAP))
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones((B, H, 1), jnp.float32)], -1)
+    new_state = (state * f[:, :, None, None]
+                 + i[:, :, None, None] * jnp.einsum("bhn,bhp->bhnp",
+                                                    k.astype(jnp.float32), v_aug))
+    y_aug = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), new_state)
+    y, n = y_aug[..., :P], y_aug[..., P:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = (y.reshape(B, d_inner).astype(dt_) * jax.nn.silu(z[:, 0]))[:, None]
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dt_)), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = _mdims(cfg)
+    return jnp.zeros((batch, H, N, P + 1), jnp.float32)
+
+
+# ------------------------------------------------------------------ sLSTM
+
+
+def slstm_params(cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {
+        "w": ParamSpec((d, 4 * d), ("embed", "mlp")),
+        "r": ParamSpec((H, hd, 4 * hd), ("heads", "head_dim", "mlp"),
+                       "normal", scale=0.01),
+        "b": ParamSpec((4 * d,), ("mlp",), "zeros"),
+        "out_proj": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+def apply_slstm(cfg: ModelConfig, p, x, state=None):
+    """True recurrence: lax.scan over timesteps.  x: (B,L,d)."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    wx = jnp.einsum("bld,de->ble", x, p["w"].astype(dt_)) + p["b"].astype(dt_)
+    r = p["r"].astype(jnp.float32)
+
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry                                   # each (B,d) f32
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhk,hke->bhe", hh, r).reshape(B, 4 * d)
+        zi = wx_t.astype(jnp.float32) + rec
+        z_, i_, f_, o_ = jnp.split(zi, 4, -1)
+        # stabilized exponential gating
+        m_new = jnp.maximum(f_ + m, i_)
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(f_ + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(dt_)
+    return jnp.einsum("bld,de->ble", hs, p["out_proj"].astype(dt_)), state
+
+
+def decode_slstm(cfg: ModelConfig, p, x, state):
+    y, new_state = apply_slstm(cfg, p, x, state)
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z - 1e9 * 0)  # h, c, n, m

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (OptState, adafactor, adam, adamw,
+                                    global_norm, init_opt_state, make_optimizer,
+                                    sgd)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine

@@ -1,0 +1,176 @@
+"""Optimizers (optax is not available offline; these are the standard
+algorithms over pytrees, with the state layouts the sharding rules and
+the ZeRO-style partitioner understand).
+
+Adafactor keeps a *factored* second moment (row/col running averages)
+for rank-≥2 parameters — the memory-policy lever that lets the 235B/340B
+configs train on a 16 GB/chip v5e pod (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment   (None for sgd/adafactor)
+    nu: Any          # second moment  (factored {"row","col"} leaves for adafactor)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable      # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_factored(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"row", "col"}
+
+
+def _zip_apply(fn, params, *trees):
+    """Apply ``fn(p_leaf, *other_leaves)`` leafwise, where the other trees
+    share params' structure but may hold dict-composites (factored nu) or
+    be None.  Returns tuple-of-trees matching fn's tuple output."""
+    p_leaves, treedef = jax.tree.flatten(params)
+    others = []
+    for t in trees:
+        if t is None:
+            others.append([None] * len(p_leaves))
+        else:
+            others.append(jax.tree.flatten(t, is_leaf=_is_factored)[0])
+    outs = [fn(p, *o) for p, *o in zip(p_leaves, *others)]
+    n_out = len(outs[0])
+    return tuple(jax.tree.unflatten(treedef, [o[i] for o in outs])
+                 for i in range(n_out))
+
+
+# --------------------------------------------------------------------- adam
+
+
+def adam(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m, v
+
+        new_p, new_m, new_v = _zip_apply(upd, params, grads, state.mu, state.nu)
+        return new_p, OptState(step, new_m, new_v)
+
+    return Optimizer("adam", init, update)
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    o = adam(b1, b2, eps, weight_decay)
+    return Optimizer("adamw", o.init, o.update)
+
+
+# ---------------------------------------------------------------- adafactor
+
+
+def adafactor(decay=0.99, eps=1e-30, clip_threshold=1.0) -> Optimizer:
+    """Factored second moment: for a rank-≥2 parameter keep row/col means
+    over the last two dims — O(r+c) instead of O(r·c) state."""
+
+    def init(params):
+        def nu0(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32), None,
+                        jax.tree.map(nu0, params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+
+        def upd(p, g, nu):
+            g32 = jnp.square(g.astype(jnp.float32)) + eps
+            if p.ndim >= 2:
+                row = decay * nu["row"] + (1 - decay) * g32.mean(-1)
+                col = decay * nu["col"] + (1 - decay) * g32.mean(-2)
+                r = row / (row.mean(-1, keepdims=True) + eps)
+                vhat = r[..., None] * col[..., None, :]
+                new_nu = {"row": row, "col": col}
+            else:
+                vhat = decay * nu + (1 - decay) * g32
+                new_nu = vhat
+            d = g.astype(jnp.float32) * jax.lax.rsqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(d)) + eps)
+            d = d / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), new_nu
+
+        new_p, new_nu = _zip_apply(upd, params, grads, state.nu)
+        return new_p, OptState(step, None, new_nu)
+
+    return Optimizer("adafactor", init, update)
+
+
+# ---------------------------------------------------------------------- sgd
+
+
+def sgd(momentum=0.0) -> Optimizer:
+    def init(params):
+        mu = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+              if momentum else None)
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        if momentum:
+            def upd(p, g, m):
+                m = momentum * m + g.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+            new_p, new_mu = _zip_apply(upd, params, grads, state.mu)
+            return new_p, OptState(step, new_mu, None)
+
+        def upd1(p, g):
+            return ((p.astype(jnp.float32)
+                     - lr * g.astype(jnp.float32)).astype(p.dtype),)
+        (new_p,) = _zip_apply(upd1, params, grads)
+        return new_p, OptState(step, None, None)
+
+    return Optimizer("sgd", init, update)
+
+
+# ------------------------------------------------------------------ factory
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adam": adam, "adamw": adamw, "adafactor": adafactor,
+            "sgd": sgd}[name](**kw)
+
+
+def init_opt_state(opt: Optimizer, params):
+    return opt.init(params)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (step -> lr scalar, traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        s = step.astype(jnp.float32)
+        wu = lr * s / max(warmup, 1)
+        return jnp.where(step < warmup, wu, decay(step - warmup))
+    return f

@@ -1,0 +1,186 @@
+"""Batched serving engine: slot-based continuous batching over the
+prefill/decode step functions (the same code paths the decode_32k /
+long_500k dry-run shapes lower).
+
+Design (vLLM-style, adapted to jit'd fixed shapes):
+  * a fixed pool of ``batch_slots`` decode lanes, each owning one row of
+    the batched rolling-buffer KV cache;
+  * incoming requests are prefilled one-at-a-time (prompt length padded
+    to ``prefill_pad`` buckets to bound recompiles) and their cache rows
+    written into a free slot;
+  * every engine tick runs ONE batched decode step for all active slots;
+    finished requests (EOS or max_new_tokens) free their slot;
+  * per-slot position counters let lanes be at different depths — the
+    per-lane validity mask comes from each lane's own ``pos``.
+
+The decode step here extends ``models.transformer.decode_step`` with a
+per-lane ``pos`` vector (B,) instead of a scalar — a strictly more
+general variant validated against the scalar path in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _decode_step_vector_pos(cfg: ModelConfig, params, cache, tokens, pos_vec):
+    """decode_step with per-lane positions.  pos_vec: (B,) int32."""
+    dt = cfg.compute_dtype
+    x = L.embed_tokens(params["embed"], tokens, dt)
+    assert cfg.arch_type in ("dense", "vlm", "moe"), cfg.arch_type
+
+    def body(h, xs):
+        bp, ck, cv = xs
+        hn = L.apply_norm(cfg, bp["ln1"], h)
+        a, ck, cv = _attend_vector_pos(cfg, bp["attn"], hn, ck, cv, pos_vec)
+        h = h + a
+        hn2 = L.apply_norm(cfg, bp["ln2"], h)
+        if cfg.arch_type == "moe":
+            from repro.models import moe as MOE
+            y, _ = MOE.apply_moe(cfg, bp["moe"], hn2)
+        else:
+            y = L.apply_mlp(cfg, bp["mlp"], hn2)
+        return h + y, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                         cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_logits(params["head"], x), {"k": ks, "v": vs}
+
+
+def _attend_vector_pos(cfg, p, x, cache_k, cache_v, pos_vec):
+    """Per-lane rolling-buffer attention (B lanes at different depths)."""
+    B, W = cache_k.shape[0], cache_k.shape[1]
+    positions = pos_vec[:, None]
+    q, k, v = L._qkv(cfg, p, x, positions)
+    slot = jnp.mod(pos_vec, W)                          # (B,)
+
+    onehot = jax.nn.one_hot(slot, W, dtype=cache_k.dtype)  # (B, W)
+    ck = cache_k * (1 - onehot[..., None, None]) + \
+        onehot[..., None, None] * k.astype(cache_k.dtype)
+    cv = cache_v * (1 - onehot[..., None, None]) + \
+        onehot[..., None, None] * v.astype(cache_v.dtype)
+
+    scores = L._gqa_scores(q, ck.astype(q.dtype)).astype(jnp.float32)
+    idx = jnp.arange(W)[None, :]
+    valid = (idx <= slot[:, None]) | (pos_vec[:, None] >= W)   # (B, W)
+    scores = jnp.where(valid[:, None, None, None, :], scores, L.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = L._gqa_out(probs, cv.astype(q.dtype), p, x.dtype)
+    return out, ck, cv
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 window: int = 128, prefill_pad: int = 32):
+        assert cfg.arch_type in ("dense", "vlm", "moe"), \
+            "engine currently serves attention-cache archs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.window = window
+        self.prefill_pad = prefill_pad
+
+        self.cache = T.init_cache(cfg, batch_slots, window)
+        self.pos = np.zeros(batch_slots, np.int32)       # context length
+        self.budget = np.zeros(batch_slots, np.int32)    # tokens remaining
+        self.owner: list[Request | None] = [None] * batch_slots
+        self.next_tok = np.zeros((batch_slots, 1), np.int32)
+
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(cfg, p, b, window=window))
+        self._decode = jax.jit(
+            lambda p, c, t, pv: _decode_step_vector_pos(cfg, p, c, t, pv))
+
+    # ------------------------------------------------------------- admit
+
+    def _free_slot(self) -> int | None:
+        for i, o in enumerate(self.owner):
+            if o is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot.  False if engine full.
+
+        The prompt is RIGHT-padded to a bucket (bounds recompiles); the
+        lane then starts at pos = S−1 with the last prompt token queued,
+        so the first tick re-decodes that position — an idempotent cache
+        write — and emits the true first generated token.  Pad-position
+        keys sit at slots ≥ S and are excluded by the validity mask.
+        """
+        i = self._free_slot()
+        if i is None:
+            return False
+        S = len(req.prompt)
+        pad = (-S) % self.prefill_pad
+        toks = np.pad(req.prompt, (0, pad))[None, :]
+        _, cache1 = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        for key in ("k", "v"):
+            self.cache[key] = self.cache[key].at[:, i].set(cache1[key][:, 0])
+        self.pos[i] = S - 1
+        self.budget[i] = req.max_new_tokens
+        self.owner[i] = req
+        self.next_tok[i, 0] = int(req.prompt[-1])
+        return True
+
+    # -------------------------------------------------------------- tick
+
+    @property
+    def active(self) -> int:
+        return sum(o is not None for o in self.owner)
+
+    def tick(self):
+        """One batched decode step for all lanes (idle lanes decode into
+        their own slot harmlessly; their outputs are ignored)."""
+        if self.active == 0:
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.next_tok),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i, req in enumerate(self.owner):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.budget[i] -= 1
+            self.next_tok[i, 0] = tok
+            if self.budget[i] <= 0 or (req.eos_id is not None
+                                       and tok == req.eos_id):
+                req.done = True
+                self.owner[i] = None
+
+    # --------------------------------------------------------------- run
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000):
+        """Continuous batching: admit whenever a slot frees, tick until
+        all requests complete."""
+        queue = list(requests)
+        ticks = 0
+        while (queue or self.active) and ticks < max_ticks:
+            while queue and self.admit(queue[0]):
+                queue.pop(0)
+            self.tick()
+            ticks += 1
+        return ticks

@@ -1,0 +1,3 @@
+from repro.train.steps import (TrainState, init_train_state, lm_loss,
+                               make_decode_fn, make_prefill_fn,
+                               make_train_step)

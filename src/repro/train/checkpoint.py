@@ -1,0 +1,76 @@
+"""Checkpointing: save/restore any pytree (TrainState, FL client stacks)
+to a directory — .npz payload + JSON manifest (orbax is not available
+offline; this is the same flatten-with-paths scheme, single-host).
+
+Layout:  <dir>/<step>/manifest.json + arrays.npz
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths, leaves = [], []
+    for path, leaf in flat:
+        paths.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return paths, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    path = os.path.join(ckpt_dir, str(step))
+    os.makedirs(path, exist_ok=True)
+    paths, leaves, _ = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d) for d in os.listdir(ckpt_dir) if re.fullmatch(r"\d+", d)]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: int | None = None):
+    """Restore into the structure of ``template`` (validates paths/shapes)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, str(step))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    t_paths, t_leaves, treedef = _flatten(template)
+    if t_paths != manifest["paths"]:
+        missing = set(manifest["paths"]) ^ set(t_paths)
+        raise ValueError(f"checkpoint/template structure mismatch: {missing}")
+    leaves = []
+    for i, (tl, shp) in enumerate(zip(t_leaves, manifest["shapes"])):
+        arr = data[f"a{i}"]
+        # template leaves may be ShapeDtypeStructs (abstract) or arrays
+        t_shape = tuple(tl.shape) if hasattr(tl, "shape") \
+            else np.asarray(tl).shape
+        if tuple(arr.shape) != t_shape:
+            raise ValueError(
+                f"shape mismatch at {t_paths[i]}: ckpt {arr.shape} vs "
+                f"template {t_shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

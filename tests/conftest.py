@@ -1,0 +1,13 @@
+import os
+
+# Tests see ONE device (smoke tests / kernels); mesh-dependent tests run
+# in subprocesses with their own XLA_FLAGS (see tests/helpers.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,188 @@
+"""Core CEFL machinery: similarity (eq. 3-4), Louvain clustering,
+leader selection (eq. 5), base/personalized partition (Step 4), and the
+communication-cost model (eq. 9) — exactness + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import comm_cost as CC
+from repro.core.louvain import cluster_clients, louvain, modularity
+from repro.core.partition import (fd_cnn_mask, mask_fraction,
+                                  masked_interpolate, param_mask)
+from repro.core.similarity import (distance_matrix, layer_flatten,
+                                   select_leader, similarity_from_distance)
+
+
+# ------------------------------------------------------------ similarity
+
+
+def test_distance_matrix_eq3():
+    """eq. 3: sum over layers of per-layer Euclidean distances."""
+    n = 5
+    l1 = jnp.asarray(np.random.RandomState(0).randn(n, 7))
+    l2 = jnp.asarray(np.random.RandomState(1).randn(n, 3))
+    d = np.asarray(distance_matrix([l1, l2]))
+    for i in range(n):
+        for j in range(n):
+            want = (np.linalg.norm(np.asarray(l1)[i] - np.asarray(l1)[j])
+                    + np.linalg.norm(np.asarray(l2)[i] - np.asarray(l2)[j]))
+            # Gram-trick cancellation noise is ~1e-3 near zero distance
+            assert abs(d[i, j] - want) < 2e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 12), seed=st.integers(0, 50))
+def test_similarity_eq4_properties(n, seed):
+    w = jnp.asarray(np.random.RandomState(seed).randn(n, 6))
+    d = distance_matrix([w])
+    s = np.asarray(similarity_from_distance(d))
+    dn = np.asarray(d)
+    off = ~np.eye(n, dtype=bool)
+    d_min, d_max = dn[off].min(), dn[off].max()
+    # eq. 4 exactly, off-diagonal
+    np.testing.assert_allclose(s[off], -dn[off] + d_min + d_max, rtol=1e-5)
+    # similarity ordering inverts distance ordering
+    assert s[off].max() == pytest.approx(-d_min + d_min + d_max, rel=1e-5)
+    assert (s[off] >= d_min - 1e-5).all()
+
+
+def test_leader_selection_eq5():
+    S = np.array([[0, 10, 1, 1],
+                  [10, 0, 1, 1],
+                  [1, 1, 0, 9],
+                  [1, 1, 9, 0]], float)
+    assert select_leader(S, [0, 1]) in (0, 1)
+    # client 2's intra-cluster similarity sum (9) vs 3 (9): tie→first max
+    assert select_leader(S, [2, 3]) == 2
+    assert select_leader(S, [1]) == 1
+    # asymmetric case
+    S2 = np.array([[0, 5, 2], [5, 0, 4], [2, 4, 0]], float)
+    assert select_leader(S2, [0, 1, 2]) == 1   # row sums: 7, 9, 6
+
+
+# -------------------------------------------------------------- louvain
+
+
+def test_louvain_two_blocks():
+    rng = np.random.RandomState(0)
+    n = 16
+    S = rng.rand(n, n) * 0.05
+    S[:8, :8] += 1.0
+    S[8:, 8:] += 1.0
+    S = (S + S.T) / 2
+    np.fill_diagonal(S, 0)
+    labels = cluster_clients(S, 2)
+    assert labels.max() + 1 == 2
+    assert len(set(labels[:8])) == 1 and len(set(labels[8:])) == 1
+    assert labels[0] != labels[8]
+
+
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_cluster_exact_k(k):
+    rng = np.random.RandomState(1)
+    S = rng.rand(20, 20)
+    S = (S + S.T) / 2
+    np.fill_diagonal(S, 0)
+    labels = cluster_clients(S, k)
+    assert labels.max() + 1 == k
+    assert set(labels) == set(range(k))
+
+
+def test_modularity_partition_beats_random():
+    rng = np.random.RandomState(2)
+    S = rng.rand(12, 12) * 0.05
+    S[:6, :6] += 1.0
+    S[6:, 6:] += 1.0
+    S = (S + S.T) / 2
+    np.fill_diagonal(S, 0)
+    good = np.array([0] * 6 + [1] * 6)
+    bad = np.array([0, 1] * 6)
+    assert modularity(S, good) > modularity(S, bad)
+    assert -0.5 <= modularity(S, good) <= 1.0
+
+
+# ------------------------------------------------------------- partition
+
+
+def test_fd_cnn_prefix_mask():
+    from repro.models.base import init_params
+    from repro.models.fd_cnn import fd_cnn_specs
+    p = init_params(fd_cnn_specs(), jax.random.PRNGKey(0))
+    m = fd_cnn_mask(p, base_layers=2)
+    assert float(m["conv1"]["w"]) == 1.0 and float(m["conv2"]["w"]) == 1.0
+    assert float(m["fc1"]["w"]) == 0.0 and float(m["fc2"]["w"]) == 0.0
+
+
+def test_transformer_prefix_mask_and_interpolate():
+    from repro.configs.registry import smoke_config
+    from repro.models import transformer as T
+    cfg = smoke_config("yi-6b")          # base_layers=1 of 2
+    p = T.init_model(cfg, jax.random.PRNGKey(0))
+    m = param_mask(cfg, p)
+    blk = np.asarray(m["blocks"]["attn"]["wq"]).reshape(-1)
+    assert blk[0] == 1.0 and blk[1] == 0.0
+    assert float(np.asarray(m["embed"]["tok"])) == 1.0
+    assert float(np.asarray(m["head"]["w"])) == 0.0
+    new = jax.tree.map(jnp.zeros_like, p)
+    mixed = masked_interpolate(m, new, p)
+    assert np.allclose(np.asarray(mixed["blocks"]["attn"]["wq"])[0], 0.0)
+    assert np.allclose(np.asarray(mixed["blocks"]["attn"]["wq"])[1],
+                       np.asarray(p["blocks"]["attn"]["wq"])[1])
+
+
+def test_moe_non_expert_mask():
+    from repro.configs.registry import smoke_config
+    from repro.models import transformer as T
+    cfg = smoke_config("qwen3-moe-235b-a22b")   # base_predicate=non_expert
+    p = T.init_model(cfg, jax.random.PRNGKey(0))
+    m = param_mask(cfg, p)
+    assert np.all(np.asarray(m["blocks"]["moe"]["wi"]) == 0.0)
+    assert np.all(np.asarray(m["blocks"]["moe"]["router"]) == 1.0)
+    assert np.all(np.asarray(m["blocks"]["attn"]["wq"]) == 1.0)
+    frac = mask_fraction(m, p)
+    assert 0.0 < frac < 0.7          # experts dominate the byte count
+
+
+# -------------------------------------------------------------- comm cost
+
+
+def test_eq9_exact():
+    """Δ = (N+K)·Σ_L δ + T(K+1)·Σ_B δ, exactly."""
+    delta = [100, 200, 300, 400]
+    N, K, T, B = 67, 2, 100, 2
+    led = CC.cefl_cost(delta, N, K, T, B)
+    full, base = sum(delta), sum(delta[:B])
+    assert led.total == (N + K) * full + T * (K + 1) * base
+    assert led.clustering_upload == N * full
+    assert led.fl_upload == K * T * base
+    assert led.fl_broadcast == T * base
+    assert led.transfer == K * full
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 200), k=st.integers(1, 10), t=st.integers(1, 500),
+       b=st.integers(1, 4))
+def test_eq9_property(n, k, t, b):
+    delta = [228, 2432, 410112, 4104]     # FD-CNN fp32 layer bytes /4
+    k = min(k, n)
+    led = CC.cefl_cost(delta, n, k, t, b)
+    assert led.total == ((n + k) * sum(delta)
+                         + t * (k + 1) * sum(delta[:b]))
+    # CEFL must beat regular FL for any T ≥ 1 once N >> K
+    if n >= 20 and t >= 10:
+        assert led.total < CC.regular_fl_cost(delta, n, t)
+
+
+def test_paper_constants_savings():
+    """Paper headline: ≥ 98% savings at N=67, K=2, T_cefl=100, T_reg=350."""
+    from repro.models.fd_cnn import layer_sizes_bytes
+    delta = list(layer_sizes_bytes().values())
+    cefl = CC.cefl_cost(delta, 67, 2, 100, 3).total
+    reg = CC.regular_fl_cost(delta, 67, 350)
+    sav = CC.savings(cefl, reg)
+    assert sav > 0.98, sav
+    fp = CC.fedper_cost(delta, 67, 350, 3)
+    assert cefl < fp < reg

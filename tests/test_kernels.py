@@ -1,0 +1,159 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs
+the pure-jnp oracles in kernels/ref.py, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ------------------------------------------------------------ pairwise
+
+
+@pytest.mark.parametrize("n,p,bn,bp", [
+    (8, 64, 8, 32), (67, 700, 32, 128), (16, 130, 8, 64),
+    (128, 512, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_dist_matches_ref(n, p, bn, bp, dtype):
+    w = jax.random.normal(KEY, (n, p), jnp.float32).astype(dtype)
+    got = ops.pairwise_dist(w, bn=bn, bp=bp)
+    want = ref.pairwise_dist_ref(w.astype(jnp.float32))
+    scale = float(jnp.max(want)) + 1e-6
+    tol = 5e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 24), p=st.integers(1, 90), seed=st.integers(0, 99))
+def test_pairwise_properties(n, p, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (n, p))
+    d = np.asarray(ops.pairwise_dist(w, bn=8, bp=32))
+    assert np.allclose(d, d.T, atol=1e-4)           # symmetry
+    assert np.allclose(np.diag(d), 0.0, atol=1e-3)  # self-distance
+    assert (d >= -1e-5).all()                       # non-negativity
+
+
+# ---------------------------------------------------------- partial agg
+
+
+@pytest.mark.parametrize("k,p,bp", [(2, 256, 128), (5, 2500, 256),
+                                    (67, 4096, 1024)])
+def test_partial_agg_matches_ref(k, p, bp):
+    w = jax.random.normal(KEY, (k, p))
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (k,)))
+    nchunks = -(-p // bp)
+    gamma = (jnp.arange(nchunks) % 2).astype(jnp.float32)
+    got = ops.partial_agg(w, a, gamma, self_idx=min(1, k - 1), bp=bp)
+    wp = jnp.pad(w, ((0, 0), (0, nchunks * bp - p)))
+    want = ref.partial_agg_ref(wp, a, gamma, min(1, k - 1), bp)[:p]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_partial_agg_gamma_semantics():
+    """gamma=1 chunks equal the weighted mean; gamma=0 chunks keep own."""
+    w = jnp.stack([jnp.full((256,), 1.0), jnp.full((256,), 3.0)])
+    a = jnp.array([0.5, 0.5])
+    out = ops.partial_agg(w, a, jnp.array([1.0, 0.0]), self_idx=1, bp=128)
+    assert np.allclose(np.asarray(out[:128]), 2.0)
+    assert np.allclose(np.asarray(out[128:]), 3.0)
+
+
+# ------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 17), (False, 9)])
+@pytest.mark.parametrize("s,h,kv,d", [(64, 4, 4, 32), (100, 8, 2, 32),
+                                      (130, 4, 1, 64)])
+def test_flash_attention_matches_ref(causal, window, s, h, kv, d):
+    q = jax.random.normal(KEY, (2, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, kv, d))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=32, bk=32)
+    g = h // kv
+    def expand(t):
+        return jnp.repeat(t.transpose(0, 2, 1, 3), g, 1).reshape(2 * h, s, d)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(2 * h, s, d), expand(k), expand(v),
+        causal=causal, window=window).reshape(2, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (1, 64, 2, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 64, 2, 32)).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    assert got.dtype == dtype
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(2, 64, 32),
+        k.transpose(0, 2, 1, 3).reshape(2, 64, 32),
+        v.transpose(0, 2, 1, 3).reshape(2, 64, 32),
+        causal=True).reshape(1, 2, 64, 32).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's einsum attention path end-to-end."""
+    from repro.configs.registry import smoke_config
+    from repro.models import layers as L
+    from repro.models.base import init_params
+
+    cfg = smoke_config("yi-6b")
+    p = init_params(L.attn_params(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+    want = L.full_attention(cfg, p, x)
+    q, k, v = L._qkv(cfg, p, x, jnp.arange(32)[None, :])
+    got_heads = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    got = jnp.einsum("bshk,hkd->bsd", got_heads, p["wo"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-2, rtol=1e-3)
+
+
+# ------------------------------------------------------ decode attention
+
+
+@pytest.mark.parametrize("w,h,kv,d,pos", [(64, 4, 2, 32, 20),
+                                          (96, 8, 8, 32, 95),
+                                          (64, 4, 1, 64, 200)])
+def test_decode_attention_matches_ref(w, h, kv, d, pos):
+    b = 2
+    q = jax.random.normal(KEY, (b, 1, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, w, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, w, kv, d))
+    got = ops.decode_attention(q, k, v, jnp.int32(pos), bk=32)
+    want = ref.decode_attention_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_decode_attention_matches_model_layer():
+    """Kernel agrees with layers.decode_attention end-to-end."""
+    from repro.configs.registry import smoke_config
+    from repro.models import layers as L
+    from repro.models.base import init_params
+
+    cfg = smoke_config("yi-6b")
+    p = init_params(L.attn_params(cfg), KEY)
+    B, W, pos = 2, 32, 20
+    x = jax.random.normal(KEY, (B, 1, cfg.d_model))
+    ck = jax.random.normal(jax.random.PRNGKey(5), (B, W, cfg.n_kv_heads, cfg.hd))
+    cv = jax.random.normal(jax.random.PRNGKey(6), (B, W, cfg.n_kv_heads, cfg.hd))
+    want, nk, nv = L.decode_attention(cfg, p, x, ck, cv, jnp.int32(pos))
+    q, _, _ = L._qkv(cfg, p, x, jnp.full((B, 1), pos, jnp.int32))
+    got_h = ops.decode_attention(q, nk, nv, jnp.int32(pos), bk=32)
+    got = jnp.einsum("bshk,hkd->bsd", got_h, p["wo"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)

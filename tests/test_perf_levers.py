@@ -1,0 +1,112 @@
+"""§Perf lever correctness: every beyond-paper optimization must keep
+the math (checkpointed chunked loss/attention are exact; fp8 paths bound
+the error) — these guard the hillclimb changes recorded in EXPERIMENTS.md."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.data.lm import synthetic_lm_batch
+from repro.models import transformer as T
+from repro.train.steps import init_train_state, lm_loss, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S, seed=0):
+    return jax.tree.map(jnp.asarray, synthetic_lm_batch(cfg, B, S, seed))
+
+
+def test_chunked_loss_exact():
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, KEY)
+    batch = _batch(cfg, 2, 17)
+    l0, _ = lm_loss(cfg, params, batch)
+    l1, _ = lm_loss(cfg.with_(loss_seq_chunk=5), params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+
+
+def test_chunked_loss_gradients_match():
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, KEY)
+    batch = _batch(cfg, 2, 16)
+    g0 = jax.grad(lambda p: lm_loss(cfg, p, batch)[0])(params)
+    g1 = jax.grad(lambda p: lm_loss(cfg.with_(loss_seq_chunk=4), p, batch)[0]
+                  )(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_q_chunked_attention_exact():
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, KEY)
+    batch = _batch(cfg, 2, 32)
+    l0, _ = T.forward(cfg, params, batch)
+    l1, _ = T.forward(cfg.with_(attn_q_chunk=8), params, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_q_chunked_attention_gradients_match():
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, KEY)
+    batch = _batch(cfg, 2, 16)
+    g0 = jax.grad(lambda p: lm_loss(cfg, p, batch)[0])(params)
+    g1 = jax.grad(lambda p: lm_loss(cfg.with_(attn_q_chunk=4), p, batch)[0]
+                  )(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4)
+
+
+def test_fp8_kv_cache_decode_agreement():
+    """int8+scales KV cache: per-element cache error ~0.4%, decode logits
+    close on a 1-layer model.  (Deeper UNTRAINED smoke stacks amplify
+    score-level noise through softmax — |k| grows to ~30 — which is an
+    artifact of random weights, not of the quantizer; recorded in
+    EXPERIMENTS.md §Perf pair C.)"""
+    cfg = smoke_config("yi-6b").with_(n_layers=1)
+    cfg8 = cfg.with_(cache_dtype=jnp.int8)
+    params = T.init_model(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0, cfg.vocab)
+    _, c0 = T.prefill(cfg, params, {"tokens": toks[:, :32]}, window=48)
+    _, c8 = T.prefill(cfg8, params, {"tokens": toks[:, :32]}, window=48)
+    assert c8["k"].dtype == jnp.int8
+    assert "k_scale" in c8
+    l0, _ = T.decode_step(cfg, params, c0, toks[:, 32:33], jnp.int32(32))
+    l8, _ = T.decode_step(cfg8, params, c8, toks[:, 32:33], jnp.int32(32))
+    # untrained smoke logits are nearly flat, so argmax is not a fair
+    # agreement metric; bound the relative logit perturbation instead
+    rel = float(jnp.max(jnp.abs(l8 - l0)) / (jnp.max(jnp.abs(l0)) + 1e-6))
+    assert rel < 0.1, rel
+    # quantizer itself: sub-percent element error
+    kk0 = np.asarray(c0["k"], np.float32)
+    kk8 = np.asarray(c8["k"], np.float32) / 127.0 * np.asarray(c8["k_scale"])
+    el = np.max(np.abs(kk0 - kk8)) / (np.max(np.abs(kk0)) + 1e-6)
+    assert el < 0.01, el
+
+
+def test_fp8_moe_dispatch_trains():
+    cfg = smoke_config("qwen3-moe-235b-a22b").with_(
+        moe_dispatch_dtype=jnp.float8_e4m3fn, microbatch=1)
+    state = init_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg))
+    b = _batch(cfg, 4, 16, seed=1)
+    losses = []
+    for _ in range(3):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_seq_parallel_noop_without_mesh():
+    """seq_parallel is a sharding hint only — numerics unchanged."""
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, KEY)
+    batch = _batch(cfg, 2, 16)
+    l0, _ = T.forward(cfg, params, batch)
+    l1, _ = T.forward(cfg.with_(seq_parallel=True), params, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1))

@@ -1,0 +1,58 @@
+"""Serving engine: continuous batching must produce exactly the tokens
+sequential greedy decoding produces, for staggered arrivals and mixed
+prompt lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    """Sequential greedy via full forward (oracle, O(S²) per token)."""
+    toks = list(map(int, prompt))
+    for _ in range(n_new):
+        logits, _ = T.forward(cfg, params,
+                              {"tokens": jnp.asarray([toks])})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("yi-6b")
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_matches_sequential_greedy(setup):
+    cfg, params = setup
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (7, 13, 5)]
+    want = [_greedy_reference(cfg, params, p, 6) for p in prompts]
+
+    eng = ServeEngine(cfg, params, batch_slots=2, window=64, prefill_pad=8)
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    ticks = eng.run(reqs)
+    assert all(r.done for r in reqs)
+    for r, w in zip(reqs, want):
+        assert r.output == w, (r.rid, r.output, w)
+    # 3 requests through 2 slots → continuous batching actually interleaved
+    assert ticks >= 6
+
+
+def test_engine_eos_frees_slot(setup):
+    cfg, params = setup
+    rng = np.random.RandomState(1)
+    p = rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+    first = _greedy_reference(cfg, params, p, 1)[0]
+    req = Request(0, p, max_new_tokens=50, eos_id=first)
+    eng = ServeEngine(cfg, params, batch_slots=1, window=64, prefill_pad=8)
+    eng.run([req])
+    assert req.done
+    assert req.output == [first]     # stopped at EOS immediately
+    assert eng.active == 0
